@@ -1,0 +1,93 @@
+"""Shared benchmark substrate: a small-but-real LM trained on the learnable
+bigram task with p simulated replicas (vmapped) — the laptop-scale analogue
+of the paper's LeNet3/MNIST + CIFARNet/CIFAR10 experiments, per the repro
+band ("pure-algorithm build fully works at laptop scale")."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import build_schedule, make_sim_train_step, replicate
+from repro.data import BigramTaskDataset
+from repro.models import lm_init, reduced
+from repro.optim import sgd
+from repro.train import make_loss_fn
+
+# v5e constants (same as launch.roofline)
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+
+def tiny_lm_cfg(d_model=64, vocab=128):
+    cfg = reduced(get_config("qwen3-0.6b"), d_model=d_model, vocab=vocab)
+    return dataclasses.replace(cfg, param_dtype="float32",
+                               compute_dtype="float32")
+
+
+def make_replica_lm(p: int, protocol: str, *, lr=0.3, seed=0,
+                    num_rotations=2, d_model=64, vocab=128):
+    cfg = tiny_lm_cfg(d_model, vocab)
+    params, _ = lm_init(jax.random.key(seed), cfg)
+    loss_fn_full = make_loss_fn(cfg)
+    loss_fn = lambda prms, batch: loss_fn_full(prms, batch)[0]
+    sched = build_schedule(max(p, 2), num_rotations=num_rotations, seed=seed)
+    opt = sgd(lr, momentum=0.9)
+    step = make_sim_train_step(loss_fn, opt, sched, protocol=protocol)
+    params = replicate(params, p)
+    opt_state = opt.init(params)
+    return cfg, step, params, opt_state, sched
+
+
+def run_replica_lm(p: int, protocol: str, steps: int, *, seq_len=32,
+                   batch_per_replica=4, lr=0.3, seed=0,
+                   time_budget_s: float | None = None
+                   ) -> Tuple[List[Dict], float]:
+    """Returns (history, wall_seconds). Batches come from p distinct bigram
+    shards with ring rotation (the paper's sample shuffle)."""
+    cfg, step, params, opt_state, sched = make_replica_lm(
+        p, protocol, lr=lr, seed=seed)
+    task = BigramTaskDataset(cfg.vocab, seed=seed + 991)
+
+    def batch_for(t):
+        toks = np.stack([
+            task.sample(np.random.default_rng(
+                ((seed * 7 + ((r - t) % p)) * 1_000_003 + t)),
+                batch_per_replica, seq_len + 1)
+            for r in range(p)])
+        return {"tokens": jnp.asarray(toks)}
+
+    hist = []
+    # warm up compile outside the timed region
+    b0 = batch_for(0)
+    opt_state, params, m = step(opt_state, params, b0, jnp.int32(0))
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    t_done = 1
+    for t in range(1, steps):
+        opt_state, params, m = step(opt_state, params, batch_for(t),
+                                    jnp.int32(t))
+        hist.append({k: float(v) for k, v in m.items()} | {"step": t})
+        t_done = t
+        if time_budget_s and time.perf_counter() - t0 > time_budget_s:
+            break
+    jax.block_until_ready(jax.tree.leaves(params)[0])
+    wall = time.perf_counter() - t0
+    return hist, wall
+
+
+def timed_us(fn, *args, iters=10, warmup=2) -> float:
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6

@@ -1,0 +1,25 @@
+"""Paper Figs 10-11: measured relative speedup of GossipGraD over AGD on the
+small-model regime (MNIST/CIFAR10 analogue: tiny LM on the bigram task),
+p=8 simulated replicas on CPU. Wall-clock per step, identical model/data."""
+from __future__ import annotations
+
+from .common import run_replica_lm
+
+STEPS = 40
+P = 8
+
+
+def rows():
+    out = []
+    walls = {}
+    for proto in ("agd", "gossip", "none"):
+        hist, wall = run_replica_lm(P, proto, STEPS, seq_len=32,
+                                    batch_per_replica=4)
+        per_step = wall / max(len(hist), 1) * 1e6
+        walls[proto] = per_step
+        out.append((f"fig10_step_{proto}_p{P}", per_step,
+                    f"final_loss={hist[-1]['loss']:.3f}"))
+    out.append((f"fig10_speedup_gossip_vs_agd_p{P}",
+                walls["agd"] / walls["gossip"] * 100,
+                f"speedup={walls['agd'] / walls['gossip']:.3f}x"))
+    return out

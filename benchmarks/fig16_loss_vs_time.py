@@ -1,0 +1,20 @@
+"""Paper Fig 16: training loss after a FIXED wall-time budget — GossipGraD's
+cheaper steps buy more updates/second, so at equal time its loss is equal or
+better than AGD's (the paper's GoogLeNet-after-one-hour chart)."""
+from __future__ import annotations
+
+from .common import run_replica_lm
+
+BUDGET_S = 20.0
+P = 8
+
+
+def rows():
+    out = []
+    for proto in ("agd", "gossip"):
+        hist, wall = run_replica_lm(P, proto, 10_000, seq_len=32,
+                                    batch_per_replica=4, lr=0.3, seed=2,
+                                    time_budget_s=BUDGET_S)
+        out.append((f"fig16_loss_at_{int(BUDGET_S)}s_{proto}", wall * 1e6,
+                    f"steps={len(hist)};loss={hist[-1]['loss']:.4f}"))
+    return out

@@ -1,0 +1,20 @@
+"""Paper Fig 17 / §7.5: GossipGraD vs all-reducing every log(p) steps — the
+other amortized-O(1) protocol. Compares measured step time and achieved loss;
+the paper found only GossipGraD kept learning under fixed hyperparameters."""
+from __future__ import annotations
+
+from .common import run_replica_lm
+
+STEPS = 120
+P = 8
+
+
+def rows():
+    out = []
+    for proto in ("gossip", "every_logp"):
+        hist, wall = run_replica_lm(P, proto, STEPS, seq_len=32,
+                                    batch_per_replica=4, lr=0.3, seed=4)
+        out.append((f"fig17_{proto}_p{P}", wall / max(len(hist), 1) * 1e6,
+                    f"loss={hist[-1]['loss']:.4f};"
+                    f"replica_var={hist[-1]['replica_variance']:.2e}"))
+    return out

@@ -1,0 +1,42 @@
+"""Microbenchmarks of the Pallas kernels (interpret mode on CPU — these
+numbers validate plumbing, not TPU perf; the roofline table carries the
+hardware story) plus their pure-jnp references on CPU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_mha, gossip_mix_flat, ssm_scan
+from repro.kernels.ref import attention_ref, gossip_mix_ref, ssm_scan_ref
+from .common import timed_us
+
+
+def rows():
+    out = []
+    key = jax.random.key(0)
+    a = jax.random.normal(key, (1 << 20,))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (1 << 20,))
+    out.append(("kernel_gossip_mix_1M_interp",
+                timed_us(lambda: gossip_mix_flat(a, b), iters=5),
+                "interpret=True"))
+    out.append(("kernel_gossip_mix_1M_ref",
+                timed_us(lambda: jax.jit(gossip_mix_ref)(a, b), iters=5),
+                "jnp"))
+    dA = jax.random.uniform(key, (1, 256, 64, 8), minval=.5, maxval=1.)
+    dBx = jax.random.normal(jax.random.fold_in(key, 2), (1, 256, 64, 8))
+    out.append(("kernel_ssm_scan_interp",
+                timed_us(lambda: ssm_scan(dA, dBx, chunk=64, block_d=64), iters=3),
+                "interpret=True"))
+    out.append(("kernel_ssm_scan_ref",
+                timed_us(lambda: jax.jit(ssm_scan_ref)(dA, dBx), iters=3), "jnp"))
+    q = jax.random.normal(key, (1, 2, 256, 64)) * .3
+    k = jax.random.normal(jax.random.fold_in(key, 3), (1, 2, 256, 64)) * .3
+    v = jax.random.normal(jax.random.fold_in(key, 4), (1, 2, 256, 64))
+    out.append(("kernel_flash_attn_interp",
+                timed_us(lambda: flash_mha(q, k, v, block_q=128, block_k=128),
+                         iters=2, warmup=1), "interpret=True"))
+    out.append(("kernel_flash_attn_ref",
+                timed_us(lambda: jax.jit(
+                    lambda q, k, v: attention_ref(q, k, v))(q, k, v),
+                    iters=3), "jnp"))
+    return out

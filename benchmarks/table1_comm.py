@@ -1,0 +1,39 @@
+"""Paper Table 1 + §3 economics: per-step communication of GossipGraD vs
+all-reduce SGD, (a) analytically across p, and (b) measured from the compiled
+dry-run HLO (collective-permute vs all-reduce bytes in the train step)."""
+from __future__ import annotations
+
+import glob
+import json
+import math
+import os
+
+from repro.core import gossip_bytes_per_step
+from .common import ICI
+
+
+def rows():
+    out = []
+    replica_bytes = 2 * 600e6  # qwen3-0.6b bf16
+    for p in (4, 8, 16, 32, 64, 128, 256, 512):
+        b = gossip_bytes_per_step(replica_bytes, dp=p, model_shards=16)
+        gossip_t = b["gossip_bytes_per_chip"] / ICI * 1e6
+        ar_t = b["allreduce_bytes_per_chip"] / ICI * 1e6
+        out.append((f"table1_comm_gossip_p{p}", gossip_t,
+                    f"bytes={b['gossip_bytes_per_chip']:.3e};latency_steps=1"))
+        out.append((f"table1_comm_allreduce_p{p}", ar_t,
+                    f"bytes={b['allreduce_bytes_per_chip']:.3e};"
+                    f"latency_steps={b['allreduce_latency_steps']}"))
+    # measured from dry-run HLO if available
+    for rec_path in sorted(glob.glob(
+            "experiments/dryrun/*16x16__qwen3-0.6b__train_4k.json")):
+        with open(rec_path) as f:
+            r = json.load(f)
+        c = r["collectives"]
+        out.append((f"table1_hlo_cp_bytes_{r['mesh']}",
+                    c["collective-permute_bytes"] / ICI * 1e6,
+                    f"count={c['collective-permute_count']}"))
+        out.append((f"table1_hlo_ar_bytes_{r['mesh']}",
+                    c["all-reduce_bytes"] / ICI * 1e6,
+                    f"count={c['all-reduce_count']}"))
+    return out

@@ -1,0 +1,72 @@
+"""Quickstart: GossipGraD in ~60 lines.
+
+Trains 8 simulated data-parallel replicas of a small qwen3-family LM with the
+paper's protocol (dissemination gossip + partner rotation + ring sample
+shuffle), and shows the two quantities the paper is about:
+
+  * loss — matches the all-reduce baseline (run with --protocol agd to see);
+  * replica variance — gossip keeps the 8 independently-updated models
+    converging to ONE model (Corollary 6.3), at O(1) communication per step.
+
+    PYTHONPATH=src python examples/quickstart.py [--protocol gossip] [--steps 120]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import build_schedule, make_sim_train_step, replicate
+from repro.data import BigramTaskDataset
+from repro.models import lm_init, reduced
+from repro.optim import sgd
+from repro.train import make_loss_fn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--protocol", default="gossip",
+                    choices=["gossip", "agd", "every_logp", "none"])
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--replicas", type=int, default=8)
+    args = ap.parse_args()
+
+    import dataclasses
+    cfg = dataclasses.replace(
+        reduced(get_config("qwen3-0.6b"), d_model=64, vocab=128),
+        param_dtype="float32", compute_dtype="float32")
+    p = args.replicas
+
+    # the paper's schedule: dissemination partners, rotated every log2(p)
+    schedule = build_schedule(p, topology="dissemination", num_rotations=2)
+    print(f"gossip schedule: p={p}, {schedule.substeps} sub-steps/round, "
+          f"period {schedule.period}")
+
+    loss_fn = make_loss_fn(cfg)
+    opt = sgd(0.3, momentum=0.9)
+    step = make_sim_train_step(lambda q, b: loss_fn(q, b)[0], opt, schedule,
+                               protocol=args.protocol)
+
+    params = replicate(lm_init(jax.random.key(0), cfg)[0], p)
+    opt_state = opt.init(params)
+    task = BigramTaskDataset(cfg.vocab, seed=7)
+
+    for t in range(args.steps):
+        rng = np.random.default_rng(t)
+        toks = np.stack([task.sample(rng, 4, 33) for _ in range(p)])
+        opt_state, params, m = step(opt_state, params,
+                                    {"tokens": jnp.asarray(toks)}, jnp.int32(t))
+        if t % 10 == 0:
+            print(f"step {t:4d}  loss {float(m['loss']):.4f}  "
+                  f"replica_var {float(m['replica_variance']):.3e}")
+    print(f"final: loss {float(m['loss']):.4f}  "
+          f"replica_var {float(m['replica_variance']):.3e} "
+          f"({args.protocol})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Batched serving example: prefill a batch of prompts, then greedy-decode —
+the same lm_prefill/lm_decode path the decode_32k / long_500k dry-run shapes
+lower onto the production mesh. Includes the VLM stub-frontend flow.
+
+    PYTHONPATH=src python examples/serve_batched.py [--arch qwen3-0.6b]
+"""
+import argparse
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, list_archs
+from repro.models import lm_init, reduced
+from repro.serve import ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b", choices=list_archs())
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(reduced(get_config(args.arch)),
+                              param_dtype="float32", compute_dtype="float32")
+    params, _ = lm_init(jax.random.key(0), cfg)
+    engine = ServingEngine(cfg, params, max_seq=256)
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+    kw = {}
+    if cfg.vision is not None:
+        kw["image_embeds"] = rng.normal(
+            size=(args.batch, cfg.vision.n_image_tokens, cfg.d_model)
+        ).astype(np.float32) * 0.02
+    if cfg.encoder is not None:
+        kw["audio_frames"] = rng.normal(
+            size=(args.batch, cfg.encoder.n_frames, cfg.d_model)
+        ).astype(np.float32) * 0.02
+
+    t0 = time.perf_counter()
+    out = engine.generate(prompts, args.new_tokens, **kw)
+    dt = time.perf_counter() - t0
+    print(f"arch={cfg.name} batch={args.batch} "
+          f"prompt={args.prompt_len} new={args.new_tokens}")
+    print(f"generated {out.shape} in {dt:.2f}s "
+          f"({args.batch * args.new_tokens / dt:.1f} tok/s incl. compile)")
+    print("first row:", out[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

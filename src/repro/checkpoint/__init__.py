@@ -1,0 +1,1 @@
+from .io import restore_state, save_state

@@ -1,0 +1,82 @@
+"""Checkpointing: pytree <-> npz with a json manifest.
+
+Leaves are keyed by their tree path; the manifest records the path list,
+dtypes, and user metadata so restore can validate structure. Works on any
+state pytree (train state with replica axis included). Arrays are pulled to
+host with ``jax.device_get`` (for sharded arrays this gathers addressable
+shards — single-process semantics, which is what this container runs).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+__all__ = ["save_state", "restore_state"]
+
+
+def _flatten(tree: PyTree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keyed = {}
+    for path, leaf in leaves:
+        key = jax.tree_util.keystr(path)
+        keyed[key] = leaf
+    return keyed, treedef
+
+
+def save_state(path: str, state: PyTree, metadata: Optional[Dict] = None,
+               step: Optional[int] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    keyed, _ = _flatten(state)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in keyed.items()}
+    # npz cannot store ml_dtypes (bf16/f8): stage them as f32 and record the
+    # original dtype in the manifest for restore
+    dtypes = {k: str(v.dtype) for k, v in arrays.items()}
+    staged = {k: (v.astype(np.float32) if v.dtype.kind not in "fiub" or
+                  str(v.dtype) == "bfloat16" else v)
+              for k, v in arrays.items()}
+    names = sorted(staged)
+    np.savez(os.path.join(path, "arrays.npz"),
+             **{f"a{i}": staged[k] for i, k in enumerate(names)})
+    manifest = {
+        "version": 1,
+        "step": step,
+        "keys": names,
+        "dtypes": dtypes,
+        "shapes": {k: list(arrays[k].shape) for k in names},
+        "metadata": metadata or {},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore_state(path: str, template: PyTree) -> Tuple[PyTree, Dict]:
+    """Restore into the structure of ``template`` (shapes/dtypes validated).
+    Returns (state, manifest)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    names = manifest["keys"]
+    arrays = {k: data[f"a{i}"] for i, k in enumerate(names)}
+
+    keyed, _ = _flatten(template)
+    if set(keyed) != set(arrays):
+        missing = sorted(set(keyed) - set(arrays))[:5]
+        extra = sorted(set(arrays) - set(keyed))[:5]
+        raise ValueError(f"checkpoint/template mismatch; missing={missing} "
+                         f"extra={extra}")
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for pth, leaf in leaves_with_path:
+        key = jax.tree_util.keystr(pth)
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch at {key}: "
+                             f"{arr.shape} vs {np.shape(leaf)}")
+        out.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(treedef, out), manifest

@@ -1,0 +1,62 @@
+"""Assigned-architecture registry (+ input shapes).
+
+Every architecture from the assignment pool is a selectable config
+(``--arch <id>``); each module cites its source in the assignment bracket.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Tuple
+
+from repro.models.config import AttnSpec, MLASpec, ModelConfig
+
+_ARCH_MODULES = {
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "olmo-1b": "olmo_1b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "whisper-base": "whisper_base",
+    "stablelm-1.6b": "stablelm_1_6b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "internlm2-20b": "internlm2_20b",
+}
+
+# (seq_len, global_batch, kind) — kind selects train_step vs serve_step.
+SHAPES: Dict[str, Tuple[int, int, str]] = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+# sliding window used for the documented sub-quadratic variant of
+# full-attention archs on long_500k (DESIGN.md §Arch-applicability)
+LONG_CONTEXT_WINDOW = 8192
+
+
+def list_archs():
+    return sorted(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; options: {list_archs()}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    return mod.CONFIG
+
+
+def with_sliding_window(cfg: ModelConfig, window: int) -> ModelConfig:
+    """Windowed-attention variant (bounds decode cache to O(window));
+    no-op for blocks that are already windowed or attention-free."""
+    blocks = []
+    for b in cfg.blocks:
+        if b.kind == "attn" and b.attn.window is None:
+            b = dataclasses.replace(b, attn=dataclasses.replace(b.attn, window=window))
+        elif b.kind == "mla" and b.mla.window is None:
+            b = dataclasses.replace(b, mla=dataclasses.replace(b.mla, window=window))
+        blocks.append(b)
+    return dataclasses.replace(cfg, name=cfg.name + f"-sw{window}",
+                               blocks=tuple(blocks))

@@ -1,0 +1,12 @@
+"""GossipGraD core: topologies, mixing analysis, distributed gossip, protocols."""
+from .topology import (GossipSchedule, build_schedule, diffusion_steps,
+                       dissemination_partner, hypercube_partner, log2_steps,
+                       reachability, ring_partner)
+from .mixing import (consensus_contraction, is_doubly_stochastic,
+                     mixing_matrix, round_matrix, spectral_gap)
+from .gossip import gossip_bytes_per_step, linear_pairs, make_gossip_mix
+from .protocols import PROTOCOLS, Protocol, make_protocol
+from .shuffle import RingShardRotation, make_ring_shuffle
+from .simulate import (allreduce_mean_sim, gossip_mix_sim,
+                       gossip_mix_sim_masked, make_sim_train_step,
+                       replica_variance, replicate)

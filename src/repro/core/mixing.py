@@ -1,0 +1,76 @@
+"""Gossip mixing-matrix analysis (theoretical underpinning, GossipGraD §6).
+
+One gossip step replaces rank j's weights by ``(w_j + w_{c(j)}) / 2`` where
+``c = recv_from`` is the step's partner permutation. Stacking all ranks, the
+step is a linear map  W' = M W  with mixing matrix
+
+    M = (I + P_c) / 2,      (P_c)_{j, c(j)} = 1.
+
+Properties used in the convergence argument:
+
+* M is doubly stochastic  -> the global parameter *mean* is preserved exactly
+  (the conserved quantity behind Corollary 6.3);
+* the product of the round's mixing matrices contracts the disagreement
+  (deviation-from-mean) subspace; its second-largest singular value gives the
+  per-round consensus rate. For the dissemination schedule the product over
+  ceil(log2 p) steps has *zero* disagreement residual when p is a power of two
+  — i.e. exact averaging, the same fixed point as one all-reduce.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from .topology import GossipSchedule
+
+__all__ = [
+    "mixing_matrix",
+    "round_matrix",
+    "is_doubly_stochastic",
+    "consensus_contraction",
+    "spectral_gap",
+]
+
+
+def mixing_matrix(recv_from: np.ndarray) -> np.ndarray:
+    """M = (I + P)/2 for one gossip step given recv_from[i] = partner of i."""
+    p = len(recv_from)
+    m = np.eye(p)
+    m[np.arange(p), recv_from] += 1.0
+    return m / 2.0
+
+
+def round_matrix(schedule: GossipSchedule, start: int = 0, steps: int | None = None) -> np.ndarray:
+    """Product of mixing matrices over ``steps`` consecutive gossip steps."""
+    if steps is None:
+        steps = schedule.substeps
+    p = schedule.p
+    m = np.eye(p)
+    for t in range(start, start + steps):
+        m = mixing_matrix(schedule.recv_from(t)) @ m
+    return m
+
+
+def is_doubly_stochastic(m: np.ndarray, atol: float = 1e-12) -> bool:
+    return (
+        bool(np.all(m >= -atol))
+        and np.allclose(m.sum(0), 1.0, atol=atol)
+        and np.allclose(m.sum(1), 1.0, atol=atol)
+    )
+
+
+def consensus_contraction(m: np.ndarray) -> float:
+    """Operator norm of M restricted to the disagreement subspace 1^perp.
+
+    < 1 means the step/round strictly contracts disagreement; 0 means exact
+    averaging (equivalent to one all-reduce).
+    """
+    p = m.shape[0]
+    proj = np.eye(p) - np.ones((p, p)) / p
+    return float(np.linalg.norm(proj @ m @ proj, ord=2))
+
+
+def spectral_gap(m: np.ndarray) -> float:
+    """1 - contraction factor; larger = faster diffusion."""
+    return 1.0 - consensus_contraction(m)

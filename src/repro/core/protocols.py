@@ -1,0 +1,115 @@
+"""Communication protocols for data-parallel training (GossipGraD Table 6).
+
+A protocol decides what happens to gradients and parameters around the local
+SGD update, given a *replica representation*: every parameter / gradient /
+optimizer-state leaf carries a leading replica axis of size ``dp`` sharded
+over the data-parallel mesh axes (``dp == 1`` means a single logical replica
+and every protocol degenerates to local SGD over that axis).
+
+    gossip      local update, then pairwise-average params with the step's
+                dissemination partner (THE paper's algorithm, §4).
+    agd         gradients mean-reduced across replicas every step — the
+                paper's all-reduce baseline with layer-wise async overlap
+                (S-Caffe / PowerAI / Caffe2 style, §3.1/§7.1).
+    every_logp  params all-reduce-averaged every ceil(log2 dp) steps, local
+                updates in between (§7.5's amortized-O(1) alternative).
+    none        no communication — the rejected ensemble extreme (§4.1).
+
+All protocols expose the same two hooks so the train step is protocol-neutral:
+
+    grads  = proto.comm_grads(grads, phase)     # before optimizer.update
+    params = proto.comm_params(params, phase)   # after optimizer.update
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .gossip import make_gossip_mix
+from .topology import GossipSchedule, build_schedule
+
+PyTree = Any
+
+PROTOCOLS = ("gossip", "agd", "every_logp", "none")
+
+__all__ = ["Protocol", "make_protocol", "PROTOCOLS"]
+
+
+def _replica_mean(tree: PyTree) -> PyTree:
+    """Mean over the leading replica axis, broadcast back (one all-reduce
+    over the data axes once sharded)."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x.mean(axis=0, keepdims=True), x.shape), tree)
+
+
+@dataclasses.dataclass
+class Protocol:
+    name: str
+    dp: int
+    schedule: Optional[GossipSchedule]
+    _mix: Optional[Callable]  # gossip only
+    dynamic: bool = False
+
+    @property
+    def period(self) -> int:
+        return self.schedule.period if self.schedule is not None else 1
+
+    def comm_grads(self, grads: PyTree, phase) -> PyTree:
+        if self.name == "agd" and self.dp > 1:
+            return _replica_mean(grads)
+        return grads
+
+    def comm_params(self, params: PyTree, phase) -> PyTree:
+        if self.dp <= 1:
+            return params
+        if self.name == "gossip":
+            return self._mix(params, phase)
+        if self.name == "every_logp":
+            sub = self.schedule.substeps
+            if self.dynamic:
+                return jax.lax.cond(
+                    (jnp.asarray(phase) + 1) % sub == 0,
+                    _replica_mean, lambda t: t, params)
+            return _replica_mean(params) if (int(phase) + 1) % sub == 0 else params
+        return params
+
+
+def make_protocol(
+    name: str,
+    mesh: Mesh,
+    data_axes: Sequence[str],
+    param_specs: PyTree,
+    *,
+    topology: str = "dissemination",
+    num_rotations: int = 2,
+    alpha: float = 0.5,
+    mode: str = "static",
+    fused: bool = False,
+    mix_impl: Callable | None = None,
+    seed: int = 0,
+) -> Protocol:
+    """Build a Protocol for ``mesh`` with replicas over ``data_axes``.
+
+    ``param_specs`` must be the PartitionSpec tree of the replica-axis
+    parameter representation (leading axis sharded over ``data_axes``).
+    """
+    if name not in PROTOCOLS:
+        raise ValueError(f"unknown protocol {name!r}; options {PROTOCOLS}")
+    data_axes = tuple(data_axes)
+    dp = int(np.prod([mesh.shape[a] for a in data_axes])) if data_axes else 1
+    schedule = None
+    mix = None
+    if dp > 1 and name in ("gossip", "every_logp"):
+        schedule = build_schedule(dp, topology=topology,
+                                  num_rotations=num_rotations, seed=seed)
+    if dp > 1 and name == "gossip":
+        mix = make_gossip_mix(mesh, data_axes, schedule, param_specs,
+                              alpha=alpha, mode=mode, fused=fused,
+                              mix_impl=mix_impl)
+    return Protocol(name=name, dp=dp, schedule=schedule, _mix=mix,
+                    dynamic=(mode == "dynamic"))

@@ -1,0 +1,156 @@
+"""Single-process p-replica simulator for GossipGraD protocols.
+
+Replicates the distributed semantics on one device by carrying an explicit
+leading *replica* axis on every parameter/batch leaf and implementing the
+communication primitives as gathers over that axis:
+
+    ppermute(x, recv_from)  ==  x[recv_from]
+    psum(x, data_axis)      ==  x.sum(0) broadcast back
+
+This serves two purposes:
+
+1. **oracle** — the shard_map/ppermute implementation in gossip.py must match
+   this simulator step-for-step (tested with 8 forced host devices);
+2. **laptop-scale science** — the paper's convergence-equivalence experiments
+   (Figs 12–14, 17) run here: p replicas of a real model trained with
+   gossip / AGD / every-log(p) / no-comm on one CPU, via a single vmapped
+   gradient computation per step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .topology import GossipSchedule
+
+PyTree = Any
+
+__all__ = [
+    "replicate",
+    "gossip_mix_sim",
+    "allreduce_mean_sim",
+    "replica_variance",
+    "make_sim_train_step",
+]
+
+
+def replicate(params: PyTree, p: int) -> PyTree:
+    """Tile every leaf with a leading replica axis of size p."""
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (p,) + x.shape), params)
+
+
+def gossip_mix_sim(params: PyTree, recv_from: jnp.ndarray) -> PyTree:
+    """w_j <- (w_j + w_{recv_from[j]}) / 2 over the leading replica axis."""
+    return jax.tree.map(lambda x: (x + x[recv_from]) * 0.5, params)
+
+
+def allreduce_mean_sim(params: PyTree) -> PyTree:
+    """All ranks replaced by the replica mean (one all-reduce)."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x.mean(0, keepdims=True), x.shape), params
+    )
+
+
+def replica_variance(params: PyTree) -> jnp.ndarray:
+    """Mean squared deviation of replicas from the replica mean — the
+    'model drift' the paper's diffusion argument keeps bounded."""
+    leaves = jax.tree.leaves(params)
+    tot = 0.0
+    n = 0
+    for x in leaves:
+        mu = x.mean(0, keepdims=True)
+        tot = tot + jnp.sum((x - mu) ** 2)
+        n += x.size
+    return tot / n
+
+
+def gossip_mix_sim_masked(params: PyTree, recv_from: jnp.ndarray,
+                          ok: jnp.ndarray) -> PyTree:
+    """Gossip mix where exchange i only happens if ok[i] (rank-failure /
+    message-loss model: a failed exchange leaves the local model unchanged —
+    the paper's 'each exchange is not expected to be reliable' premise,
+    §4.2)."""
+    m = ok.astype(jnp.float32)
+
+    def mix(x):
+        shape = (len(m),) + (1,) * (x.ndim - 1)
+        w = m.reshape(shape) * 0.5
+        return x * (1.0 - w) + x[recv_from] * w
+
+    return jax.tree.map(mix, params)
+
+
+def make_sim_train_step(
+    loss_fn: Callable[[PyTree, Any], jnp.ndarray],
+    optimizer,
+    schedule: GossipSchedule,
+    protocol: str = "gossip",
+    drop_prob: float = 0.0,
+    seed: int = 0,
+) -> Callable:
+    """Build a jitted p-replica simulated train step.
+
+    loss_fn(params, batch) -> scalar, for ONE replica. Batches carry a leading
+    replica axis. Returns step(opt_state, params_rep, batch_rep, step_idx) ->
+    (opt_state, params_rep, metrics).
+
+    Protocols (paper Table 6 + §4.1/§7.5 + ablations):
+      gossip      — local update then pairwise mix with the step's partner
+                    (THE paper's algorithm);
+      gossip_grad — gradients (not models) averaged with the partner before
+                    the update — the Blot/Jin-style variant the paper argues
+                    against (ablation);
+      agd         — gradients mean-all-reduced every step (baseline);
+      every_logp  — all-reduce of *models* every log2(p) steps, else local;
+      none        — no communication (the rejected ensemble extreme, §4.1).
+
+    ``drop_prob`` > 0 drops individual gossip exchanges at random (rank
+    failure / unreliable-message ablation); only meaningful for gossip*.
+    """
+    p = schedule.p
+    perm_table = jnp.asarray(
+        np.stack([schedule.recv_from(t) for t in range(schedule.period)])
+    )
+    grad_fn = jax.vmap(jax.value_and_grad(loss_fn))
+    base_key = jax.random.key(seed + 7919)
+
+    @jax.jit
+    def step(opt_state, params, batch, step_idx):
+        losses, grads = grad_fn(params, batch)
+        recv = perm_table[step_idx % schedule.period]
+        if drop_prob > 0.0:
+            ok = jax.random.uniform(
+                jax.random.fold_in(base_key, step_idx), (p,)) >= drop_prob
+        else:
+            ok = jnp.ones((p,), bool)
+        if protocol == "agd":
+            grads = jax.tree.map(
+                lambda g: jnp.broadcast_to(g.mean(0, keepdims=True), g.shape), grads
+            )
+        elif protocol == "gossip_grad":
+            grads = gossip_mix_sim_masked(grads, recv, ok)
+        params, opt_state = optimizer.update(params, grads, opt_state)
+        if protocol == "gossip":
+            params = gossip_mix_sim_masked(params, recv, ok)
+        elif protocol == "every_logp":
+            params = jax.lax.cond(
+                (step_idx + 1) % schedule.substeps == 0,
+                allreduce_mean_sim,
+                lambda q: q,
+                params,
+            )
+        elif protocol in ("agd", "none", "gossip_grad"):
+            pass
+        else:
+            raise ValueError(f"unknown protocol {protocol!r}")
+        metrics = {
+            "loss": losses.mean(),
+            "replica_variance": replica_variance(params),
+        }
+        return opt_state, params, metrics
+
+    return step

@@ -1,0 +1,191 @@
+"""Gossip communication topologies (GossipGraD §4.3–4.5).
+
+A *schedule* assigns, for every training step, a permutation of ranks: rank i
+sends its model to ``partner[i]`` and receives from the inverse image. The
+paper's requirements (§4.3):
+
+  1. constant communication complexity — each rank talks to O(1) partners/step;
+  2. balanced communication — the step's exchange is a *permutation*;
+  3. sub-linear diffusion — indirect mixing completes in ⌈log2 p⌉ steps;
+  4. bisection-bandwidth friendly — shifted exchanges map onto torus neighbors.
+
+Two base topologies from the paper:
+
+* **dissemination** (preferred, §4.4.2): at sub-step k, rank i sends to
+  ``(i + 2^k) % p`` and receives from ``(i - 2^k) % p`` — send target and recv
+  source differ, so each rank diffuses *from two partners* per step.
+* **hypercube** (§4.4.1): partner is ``i XOR 2^k`` — a pairwise exchange
+  (send target == recv source). Requires p to be a power of two.
+
+Partner **rotation** (§4.5.1): after every ``log2 p`` steps, the virtual rank
+space is re-labelled by a pre-computed random permutation sigma_r, giving the
+effective partner map  ``i -> sigma_r^{-1}((sigma_r(i) + 2^k) % p)``.
+All permutations are pre-computed at launch ("communicators are created at
+start of the application", §4.5.1) so they are *static* inside jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "GossipSchedule",
+    "dissemination_partner",
+    "hypercube_partner",
+    "ring_partner",
+    "build_schedule",
+    "diffusion_steps",
+    "reachability",
+]
+
+
+def _check_p(p: int) -> None:
+    if p < 2:
+        raise ValueError(f"gossip needs p >= 2 ranks, got {p}")
+
+
+def log2_steps(p: int) -> int:
+    """Number of sub-steps per round: ceil(log2 p)."""
+    return max(1, math.ceil(math.log2(p)))
+
+
+def dissemination_partner(p: int, k: int) -> np.ndarray:
+    """send_to[i] = (i + 2^k) % p  (GossipGraD §4.4.2)."""
+    _check_p(p)
+    shift = pow(2, k % log2_steps(p))
+    return (np.arange(p) + shift) % p
+
+
+def hypercube_partner(p: int, k: int) -> np.ndarray:
+    """send_to[i] = i XOR 2^k (requires p a power of two, §4.4.1)."""
+    _check_p(p)
+    if p & (p - 1):
+        raise ValueError(f"hypercube topology requires power-of-two p, got {p}")
+    mask = pow(2, k % log2_steps(p))
+    return np.arange(p) ^ mask
+
+
+def ring_partner(p: int, k: int = 0) -> np.ndarray:
+    """send_to[i] = (i + 1) % p — used for the sample shuffle (§4.5.2)."""
+    _check_p(p)
+    del k
+    return (np.arange(p) + 1) % p
+
+
+_TOPOLOGIES = {
+    "dissemination": dissemination_partner,
+    "hypercube": hypercube_partner,
+    "ring": ring_partner,
+}
+
+
+def _apply_rotation(partner: np.ndarray, sigma: np.ndarray) -> np.ndarray:
+    """Relabel a partner map through permutation sigma.
+
+    Effective map: i -> sigma^{-1}(partner(sigma(i))).
+    """
+    inv = np.empty_like(sigma)
+    inv[sigma] = np.arange(len(sigma))
+    return inv[partner[sigma]]
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipSchedule:
+    """Pre-computed static gossip schedule.
+
+    ``perms`` is a (num_rotations * substeps, p) int array; row t is the
+    send-to permutation used at training step ``t mod rows``. The schedule
+    cycles: one *round* = ``substeps`` consecutive steps under one rotation.
+    """
+
+    p: int
+    topology: str
+    num_rotations: int
+    substeps: int
+    perms: np.ndarray  # (num_rotations * substeps, p)
+
+    @property
+    def period(self) -> int:
+        return self.perms.shape[0]
+
+    def send_to(self, step: int) -> np.ndarray:
+        return self.perms[step % self.period]
+
+    def recv_from(self, step: int) -> np.ndarray:
+        s = self.send_to(step)
+        inv = np.empty_like(s)
+        inv[s] = np.arange(self.p)
+        return inv
+
+    def ppermute_pairs(self, step: int) -> List[Tuple[int, int]]:
+        """(src, dst) pairs for jax.lax.ppermute at this step."""
+        return [(int(i), int(d)) for i, d in enumerate(self.send_to(step))]
+
+    def all_pairs(self) -> List[List[Tuple[int, int]]]:
+        return [self.ppermute_pairs(t) for t in range(self.period)]
+
+
+def build_schedule(
+    p: int,
+    topology: str = "dissemination",
+    num_rotations: int = 2,
+    seed: int = 0,
+) -> GossipSchedule:
+    """Build the static schedule: ``num_rotations`` random relabelings of the
+    base topology, each used for ``log2(p)`` consecutive steps (§4.5.1).
+
+    ``num_rotations=1`` disables rotation (identity relabeling only). The paper
+    proposes p random shuffles; any number >= 2 exhibits the rotation property
+    while keeping the jit branch count (= num_rotations * log2 p) small.
+    """
+    _check_p(p)
+    if topology not in _TOPOLOGIES:
+        raise ValueError(f"unknown topology {topology!r}; options {sorted(_TOPOLOGIES)}")
+    fn = _TOPOLOGIES[topology]
+    substeps = 1 if topology == "ring" else log2_steps(p)
+    rng = np.random.default_rng(seed)
+    rows = []
+    for r in range(num_rotations):
+        sigma = np.arange(p) if r == 0 else rng.permutation(p)
+        for k in range(substeps):
+            base = fn(p, k)
+            rows.append(_apply_rotation(base, sigma))
+    perms = np.stack(rows)
+    # Invariant: every row is a permutation (balanced communication, §4.3).
+    for t, row in enumerate(perms):
+        if len(np.unique(row)) != p:
+            raise AssertionError(f"schedule row {t} is not a permutation")
+    return GossipSchedule(p=p, topology=topology, num_rotations=num_rotations,
+                          substeps=substeps, perms=perms)
+
+
+def reachability(schedule: GossipSchedule, steps: int) -> np.ndarray:
+    """Boolean (p, p) matrix: has information from rank j reached rank i
+    within ``steps`` gossip steps (directly or indirectly)?
+
+    Models the averaging dataflow: at each step, rank i's state after the mix
+    depends on its own previous state and the state received from
+    ``recv_from[i]`` (dissemination receives from (i - 2^k) % p).
+    """
+    p = schedule.p
+    reach = np.eye(p, dtype=bool)
+    for t in range(steps):
+        recv = schedule.recv_from(t)
+        reach = reach | reach[recv]
+    return reach
+
+
+def diffusion_steps(schedule: GossipSchedule, max_steps: int = 64) -> int:
+    """Smallest number of steps after which all ranks have (indirectly) mixed
+    with all others. Paper claim (§4.4): == ceil(log2 p) for dissemination."""
+    p = schedule.p
+    reach = np.eye(p, dtype=bool)
+    for t in range(max_steps):
+        recv = schedule.recv_from(t)
+        reach = reach | reach[recv]
+        if reach.all():
+            return t + 1
+    return -1

@@ -1,0 +1,2 @@
+from .synthetic import (BigramTaskDataset, ShardedTokenDataset,
+                        make_replica_batches)

@@ -1,0 +1,93 @@
+"""Deterministic synthetic data pipeline with GossipGraD's sample rotation.
+
+The paper reads the dataset once into per-rank shards and then *ring-rotates*
+shards between ranks (§4.5.2) so every rank's long-run objective covers the
+whole dataset (Lemma 6.1). Here the dataset is synthetic-but-learnable and the
+rotation is index-based (bit-identical to shipping the buffers, free on a real
+cluster because it overlaps with feed-forward — see core/shuffle.py for the
+device-side ppermute realization inside the train step).
+
+``BigramTaskDataset`` generates token streams from a fixed random bigram
+transition table — a distribution a small LM can actually learn, so the
+convergence-equivalence experiments (paper Figs 12-14) have signal, unlike
+uniform noise.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.shuffle import RingShardRotation
+
+__all__ = ["ShardedTokenDataset", "BigramTaskDataset", "make_replica_batches"]
+
+
+class BigramTaskDataset:
+    """Learnable synthetic language: tokens follow a sparse random bigram
+    chain with temperature; perfectly deterministic given (seed, shard)."""
+
+    def __init__(self, vocab: int, seed: int = 0, branching: int = 4):
+        self.vocab = vocab
+        rng = np.random.default_rng(seed)
+        # each token transitions to `branching` candidates with fixed probs
+        self.next_tok = rng.integers(0, vocab, size=(vocab, branching))
+        p = rng.dirichlet(np.ones(branching) * 0.5, size=vocab)
+        self.next_p = p
+
+    def sample(self, rng: np.random.Generator, batch: int,
+               seq_len: int) -> np.ndarray:
+        toks = np.empty((batch, seq_len), np.int32)
+        cur = rng.integers(0, self.vocab, size=batch)
+        branch = self.next_tok.shape[1]
+        for t in range(seq_len):
+            toks[:, t] = cur
+            # vectorized categorical draw per row
+            u = rng.random(batch)
+            cdf = np.cumsum(self.next_p[cur], axis=1)
+            choice = (u[:, None] > cdf).sum(axis=1).clip(0, branch - 1)
+            cur = self.next_tok[cur, choice]
+        return toks
+
+
+class ShardedTokenDataset:
+    """p shards of a shared underlying distribution; rank r at step t reads
+    shard ``(r - t//steps_per_shard) % p`` — the ring rotation."""
+
+    def __init__(self, vocab: int, seq_len: int, n_shards: int,
+                 batch_per_shard: int, seed: int = 0,
+                 steps_per_shard: int = 1,
+                 task: Optional[BigramTaskDataset] = None):
+        self.vocab = vocab
+        self.seq_len = seq_len
+        self.n_shards = n_shards
+        self.batch_per_shard = batch_per_shard
+        self.seed = seed
+        self.steps_per_shard = max(1, steps_per_shard)
+        self.rotation = RingShardRotation(n_shards)
+        self.task = task or BigramTaskDataset(vocab, seed=seed + 991)
+
+    def shard_batch(self, shard: int, step: int) -> np.ndarray:
+        """Deterministic batch from ``shard`` at ``step`` (B_shard, S+1):
+        +1 so train consumes inputs tokens[:-1] / labels tokens[1:]."""
+        rng = np.random.default_rng(
+            (self.seed * 1_000_003 + shard) * 1_000_003 + step)
+        return self.task.sample(rng, self.batch_per_shard, self.seq_len + 1)
+
+    def rank_batch(self, rank: int, step: int) -> np.ndarray:
+        rot = step // self.steps_per_shard
+        shard = self.rotation.shard_for_rank(rank, rot)
+        return self.shard_batch(shard, step)
+
+    def global_batch(self, step: int) -> np.ndarray:
+        """(n_shards * B_shard, S+1) — replica-major concatenation."""
+        return np.concatenate(
+            [self.rank_batch(r, step) for r in range(self.n_shards)], axis=0)
+
+
+def make_replica_batches(ds: ShardedTokenDataset, step: int,
+                         dp: int) -> Dict[str, np.ndarray]:
+    """Batch dict shaped (dp, local_b, S+1) for the replica train step."""
+    g = ds.global_batch(step)
+    assert g.shape[0] % dp == 0
+    return {"tokens": g.reshape(dp, -1, g.shape[1])}

@@ -1,0 +1,40 @@
+"""Distribution context: lets deep model code (MoE dispatch, attention)
+attach logical sharding constraints without threading the mesh through every
+call. The step factories enter ``use_distribution`` inside the traced
+function, so constraints resolve against the active mesh at trace time and
+no-op in plain single-device usage (smoke tests, examples).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+
+_CURRENT = []
+
+__all__ = ["use_distribution", "constrain_logical", "current_distribution"]
+
+
+def current_distribution():
+    """The active Distribution, or None outside a step factory trace."""
+    return _CURRENT[-1] if _CURRENT else None
+
+
+@contextlib.contextmanager
+def use_distribution(dist):
+    _CURRENT.append(dist)
+    try:
+        yield
+    finally:
+        _CURRENT.pop()
+
+
+def constrain_logical(x, annotation: str):
+    """with_sharding_constraint by logical-axes annotation (see
+    train.sharding rules); identity when no distribution is active."""
+    if not _CURRENT:
+        return x
+    dist = _CURRENT[-1]
+    spec = dist.leaf_spec(tuple(x.shape), annotation, False)
+    return jax.lax.with_sharding_constraint(x, dist.sharding(spec))

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the compute hot-spots (validated interpret=True on
+# CPU; see tests/test_kernels.py for the shape/dtype sweeps vs ref.py):
+#   gossip_mix      — the paper's per-step (w + w_recv)/2 fused elementwise
+#   ssm_scan        — chunked Mamba selective scan (falcon-mamba / jamba)
+#   flash_attention — blocked causal attention w/ online softmax + windows
+from .ops import (INTERPRET, flash_mha, gossip_mix_flat, gossip_mix_tree,
+                  ssm_scan)
+from . import ref

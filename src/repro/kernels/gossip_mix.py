@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: fused gossip mix  out = (1-alpha)*local + alpha*recv.
+
+This is GossipGraD's per-step arithmetic (w + w_recv)/2 applied to every
+parameter buffer right after the collective-permute delivers the partner's
+shard. Fusing it into one VMEM-tiled elementwise kernel avoids materializing
+``recv`` round-trips through HBM between the collective and the averaging —
+on a 7B-replica gossip step that's ~14 GB of avoided HBM traffic per mix.
+
+Layout: inputs are flattened to (M, LANE) with LANE=128-aligned columns; the
+grid tiles rows so each step's working set (3 tiles) fits comfortably in the
+~16 MB/core VMEM budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["gossip_mix_2d", "LANE", "DEFAULT_ROWS"]
+
+LANE = 128          # TPU lane width
+DEFAULT_ROWS = 512  # rows per tile: 512*128*4B*3bufs ~= 786 KB of VMEM
+
+
+def _mix_kernel(a_ref, b_ref, o_ref, *, alpha: float):
+    a = a_ref[...]
+    b = b_ref[...]
+    o_ref[...] = (a * (1.0 - alpha) + b * alpha).astype(o_ref.dtype)
+
+
+def gossip_mix_2d(a: jnp.ndarray, b: jnp.ndarray, alpha: float = 0.5,
+                  block_rows: int = DEFAULT_ROWS,
+                  interpret: bool = False) -> jnp.ndarray:
+    """a, b: (M, N) with N a multiple of LANE; returns the mixed array."""
+    assert a.shape == b.shape and a.dtype == b.dtype, (a.shape, b.shape)
+    M, N = a.shape
+    assert N % LANE == 0, f"last dim {N} must be a multiple of {LANE}"
+    bm = min(block_rows, M)
+    grid = (pl.cdiv(M, bm),)
+    spec = pl.BlockSpec((bm, N), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_mix_kernel, alpha=float(alpha)),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+        interpret=interpret,
+    )(a, b)

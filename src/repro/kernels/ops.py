@@ -1,0 +1,83 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels run in interpret mode — controlled by
+``repro.kernels.ops.INTERPRET`` which defaults to True unless a TPU backend
+is present. The wrappers handle padding/reshaping so arbitrary model shapes
+hit hardware-aligned kernel tiles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .flash_attention import flash_attention
+from .gossip_mix import LANE, gossip_mix_2d
+from .ssm_scan import ssm_scan_chunked
+
+PyTree = Any
+
+__all__ = ["INTERPRET", "gossip_mix_flat", "gossip_mix_tree", "ssm_scan",
+           "flash_mha"]
+
+
+def _default_interpret() -> bool:
+    try:
+        return jax.default_backend() != "tpu"
+    except Exception:
+        return True
+
+
+INTERPRET = _default_interpret()
+
+
+@functools.partial(jax.jit, static_argnames=("alpha",))
+def gossip_mix_flat(a: jnp.ndarray, b: jnp.ndarray,
+                    alpha: float = 0.5) -> jnp.ndarray:
+    """Mix two same-shape buffers of any shape via the tiled kernel."""
+    shape, dtype = a.shape, a.dtype
+    n = int(np.prod(shape))
+    cols = LANE
+    rows = -(-n // cols)
+    pad = rows * cols - n
+    af = jnp.pad(a.reshape(-1), (0, pad)).reshape(rows, cols)
+    bf = jnp.pad(b.reshape(-1), (0, pad)).reshape(rows, cols)
+    out = gossip_mix_2d(af, bf, alpha=alpha, interpret=INTERPRET)
+    return out.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+def gossip_mix_tree(a: PyTree, b: PyTree, alpha: float = 0.5) -> PyTree:
+    """Per-leaf kernel mix — a drop-in ``mix_impl`` for core.gossip
+    (signature (local, received, alpha))."""
+    return jax.tree.map(lambda x, y: gossip_mix_flat(x, y, alpha=alpha), a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d"))
+def ssm_scan(dA: jnp.ndarray, dBx: jnp.ndarray, chunk: int = 128,
+             block_d: int = 256) -> jnp.ndarray:
+    """(B,S,D,N) selective scan via the chunked kernel; pads S to a chunk
+    multiple and D to a block multiple."""
+    B, S, D, N = dA.shape
+    ch = min(chunk, S)
+    bd = min(block_d, D)
+    Sp = -(-S // ch) * ch
+    Dp = -(-D // bd) * bd
+    padded = (Sp != S) or (Dp != D)
+    if padded:
+        padw = ((0, 0), (0, Sp - S), (0, Dp - D), (0, 0))
+        dA = jnp.pad(dA, padw)
+        dBx = jnp.pad(dBx, padw)
+    h = ssm_scan_chunked(dA, dBx, chunk=ch, block_d=bd, interpret=INTERPRET)
+    if padded:
+        h = h[:, :S, :D]
+    return h
+
+
+def flash_mha(q, k, v, *, causal=True, window=None, block_q=128, block_k=128):
+    """(B,H,S,d) x (B,H,T,d) flash attention (full heads)."""
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           block_q=block_q, block_k=block_k,
+                           interpret=INTERPRET)

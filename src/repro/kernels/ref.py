@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gossip_mix_ref", "ssm_scan_ref", "attention_ref"]
+
+
+def gossip_mix_ref(a: jnp.ndarray, b: jnp.ndarray,
+                   alpha: float = 0.5) -> jnp.ndarray:
+    return (a.astype(jnp.float32) * (1.0 - alpha)
+            + b.astype(jnp.float32) * alpha).astype(a.dtype)
+
+
+def ssm_scan_ref(dA: jnp.ndarray, dBx: jnp.ndarray) -> jnp.ndarray:
+    """Sequential scan h_t = dA_t h_{t-1} + dBx_t over axis 1.
+    dA/dBx (B, S, D, N)."""
+    def step(h, x):
+        a, b = x
+        h = a * h + b
+        return h, h
+
+    _, hs = jax.lax.scan(step, jnp.zeros_like(dA[:, 0]),
+                         (jnp.moveaxis(dA, 1, 0), jnp.moveaxis(dBx, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window=None, scale=None) -> jnp.ndarray:
+    """q (B,H,S,d), k/v (B,H,T,d) — dense softmax attention."""
+    B, H, S, d = q.shape
+    T = k.shape[2]
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qi = jnp.arange(S)[:, None]
+    kj = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= (qi - kj) < window
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd",
+                      w, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,245 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination against 512 placeholder host devices, and extract the roofline
+inputs (memory analysis, cost analysis, collective bytes) from the compiled
+artifact. No arrays are ever allocated — inputs are ShapeDtypeStructs.
+
+The two lines above MUST precede any other import (jax locks the device count
+at first backend init), and this flag is set here ONLY — smoke tests and
+benches see the real single CPU device.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch all --shape all --mesh both --protocol gossip \
+        --out experiments/dryrun
+
+Each combination writes an incremental JSON record, so interrupted sweeps
+resume for free (--force recompiles).
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import V5E, collective_bytes, roofline_terms
+from repro.launch.specs import (active_param_count, param_count,
+                                resolve_config, serve_input_specs,
+                                train_input_specs)
+from repro.models.config import ModelConfig
+from repro.optim import sgd
+from repro.serve import make_decode_step, make_prefill_step
+from repro.train import make_distribution, make_train_step_bundle
+
+__all__ = ["run_one", "main"]
+
+
+def _mem_summary(compiled) -> Dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # backend-dependent
+        return {"error": f"{type(e).__name__}: {e}"}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def _cost_summary(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:
+        return {"error": f"{type(e).__name__}: {e}"}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and not k.startswith("utilization")}
+
+
+def run_one(arch: str, shape: str, *, multi_pod: bool, protocol: str = "gossip",
+            gossip_fused: bool = False, num_rotations: int = 2,
+            remat: bool = True, remat_policy=None, ssm_scan: str = "assoc",
+            dist_mode: str = None, topology: str = "dissemination",
+            verbose: bool = True) -> Dict[str, Any]:
+    """Lower+compile one (arch, shape, mesh) and return the roofline record."""
+    seq_len, global_batch, kind = SHAPES[shape]
+    cfg, notes = resolve_config(arch, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    dist = make_distribution(mesh, dist_mode or cfg.dist_mode)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape, "kind": kind,
+        "mesh": "x".join(str(s) for s in mesh.shape.values()),
+        "chips": n_chips, "protocol": protocol if kind == "train" else None,
+        "dist_mode": cfg.dist_mode, "dp": dist.dp, "notes": notes,
+        "seq_len": seq_len, "global_batch": global_batch,
+    }
+    t0 = time.perf_counter()
+
+    ssm_impl = None
+    if ssm_scan == "chunked":
+        import functools as _ft
+
+        from repro.models.mamba import ssm_scan_chunked_jnp
+        ssm_impl = _ft.partial(ssm_scan_chunked_jnp, chunk=256)
+        rec["ssm_scan"] = "chunked256"
+
+    if kind == "train":
+        optimizer = sgd(0.1, momentum=0.9)
+        state_shapes, state_axes, batch_shapes = train_input_specs(
+            cfg, dist, seq_len, global_batch, optimizer)
+        bundle = make_train_step_bundle(
+            cfg, dist, optimizer, state_shapes=state_shapes,
+            state_axes=state_axes, batch_shapes=batch_shapes,
+            protocol=protocol, topology=topology,
+            gossip_fused=gossip_fused,
+            num_rotations=num_rotations, remat=remat,
+            remat_policy=remat_policy, ssm_scan_impl=ssm_impl)
+        fn = bundle.jitted(phase=0, donate=True)
+        with mesh:
+            lowered = fn.lower(state_shapes, batch_shapes)
+        rec["params"] = param_count(state_shapes["params"]) // max(dist.dp, 1)
+        rec["active_params"] = active_param_count(
+            cfg, state_shapes["params"]) // max(dist.dp, 1)
+        rec["tokens_per_step"] = global_batch * seq_len
+    else:
+        specs = serve_input_specs(cfg, dist, seq_len, global_batch, kind)
+        if kind == "decode":
+            bundle = make_decode_step(
+                cfg, dist, param_shapes=specs["params"],
+                param_axes=specs["params_axes"], cache_shapes=specs["cache"])
+            args = (specs["params"], specs["cache"], specs["token"],
+                    specs["pos"])
+        else:
+            bundle = make_prefill_step(
+                cfg, dist, param_shapes=specs["params"],
+                param_axes=specs["params_axes"], cache_shapes=specs["cache"],
+                with_image=cfg.vision is not None,
+                with_audio=cfg.encoder is not None)
+            args = [specs["params"], specs["cache"], specs["tokens"]]
+            if cfg.vision is not None:
+                args.append(specs["image_embeds"])
+            if cfg.encoder is not None:
+                args.append(specs["audio_frames"])
+            args = tuple(args)
+        fn = bundle.jitted(donate_cache=True)
+        with mesh:
+            lowered = fn.lower(*args)
+        rec["params"] = param_count(specs["params"])
+        rec["active_params"] = active_param_count(cfg, specs["params"])
+        rec["tokens_per_step"] = (global_batch if kind == "decode"
+                                  else global_batch * seq_len)
+    rec["lower_s"] = round(time.perf_counter() - t0, 2)
+
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.perf_counter() - t1, 2)
+
+    mem = _mem_summary(compiled)
+    cost = _cost_summary(compiled)
+    rec["memory_analysis"] = mem
+    rec["cost_analysis"] = cost
+    if verbose:
+        print(f"  memory_analysis: {mem}")
+        print(f"  cost_analysis: { {k: cost[k] for k in sorted(cost)[:6]} }")
+
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    rec["collectives"] = coll
+
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    terms = roofline_terms(flops, bytes_acc, coll["wire_bytes"])
+    rec["roofline"] = terms
+    # useful-compute ratio: MODEL_FLOPS vs compiled per-chip flops * chips
+    model_flops = 6.0 * rec["active_params"] * rec["tokens_per_step"]
+    if kind == "train":
+        pass  # 6ND already counts fwd+bwd
+    else:
+        model_flops = 2.0 * rec["active_params"] * rec["tokens_per_step"]
+    rec["model_flops"] = model_flops
+    rec["hlo_flops_total"] = flops * n_chips
+    rec["useful_flop_ratio"] = (model_flops / rec["hlo_flops_total"]
+                                if flops else None)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--protocol", default="gossip")
+    ap.add_argument("--gossip-fused", action="store_true")
+    ap.add_argument("--num-rotations", type=int, default=2)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--ssm-scan", default="assoc", choices=["assoc", "chunked"])
+    ap.add_argument("--remat-policy", default=None)
+    ap.add_argument("--dist-mode", default=None,
+                    choices=[None, "replica", "fsdp", "pure_dp"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for multi in meshes:
+        mesh_name = "2x16x16" if multi else "16x16"
+        for arch in archs:
+            for shape in shapes:
+                path = os.path.join(
+                    args.out, f"{args.tag}__{mesh_name}__{arch}__{shape}.json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip] {path}")
+                    continue
+                print(f"[dryrun] {mesh_name} {arch} {shape} "
+                      f"proto={args.protocol}", flush=True)
+                try:
+                    rec = run_one(arch, shape, multi_pod=multi,
+                                  protocol=args.protocol,
+                                  gossip_fused=args.gossip_fused,
+                                  num_rotations=args.num_rotations,
+                                  remat=not args.no_remat,
+                                  remat_policy=args.remat_policy,
+                                  ssm_scan=args.ssm_scan,
+                                  dist_mode=args.dist_mode)
+                    rec["tag"] = args.tag
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    r = rec["roofline"]
+                    print(f"  ok: lower {rec['lower_s']}s compile "
+                          f"{rec['compile_s']}s dominant={r['dominant']} "
+                          f"compute={r['compute_s']:.2e}s "
+                          f"memory={r['memory_s']:.2e}s "
+                          f"collective={r['collective_s']:.2e}s", flush=True)
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((mesh_name, arch, shape, repr(e)))
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("all dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

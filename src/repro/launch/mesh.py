@@ -1,0 +1,37 @@
+"""Production meshes.
+
+Functions, not module-level constants, so importing this module never touches
+jax device state (device count is locked at first backend init — the dry-run
+must set XLA_FLAGS before any of this runs).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+__all__ = ["make_production_mesh", "make_smoke_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single pod: 16x16 = 256 chips (data, model). Multi-pod: 2 pods =
+    512 chips (pod, data, model) — the ``pod`` axis is the gossip domain for
+    the hierarchical (fsdp-mode) architectures and part of the replica domain
+    for the rest."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import numpy as _np
+    n = int(_np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"production mesh needs {n} devices, found {len(devs)} — the "
+            "dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count"
+            "=512 before any jax import (see launch/dryrun.py)")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes),
+                         devices=devs[:n])
+
+
+def make_smoke_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Tiny mesh over however many (possibly forced-host) devices exist."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

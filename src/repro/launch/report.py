@@ -1,0 +1,169 @@
+"""Aggregate dry-run JSON records into the EXPERIMENTS.md roofline tables.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.report --dir experiments/dryrun \
+        --tag baseline --mesh 16x16 --markdown
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+__all__ = ["load_records", "roofline_table", "main"]
+
+_ARCH_ORDER = [
+    "falcon-mamba-7b", "qwen3-0.6b", "olmo-1b", "kimi-k2-1t-a32b",
+    "whisper-base", "stablelm-1.6b", "jamba-v0.1-52b", "deepseek-v3-671b",
+    "llava-next-mistral-7b", "internlm2-20b",
+]
+_SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_records(dirpath: str, tag: str = "baseline",
+                 mesh: str | None = None) -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dirpath, f"{tag}__*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh is None or r.get("mesh") == mesh:
+            recs.append(r)
+    recs.sort(key=lambda r: (_SHAPE_ORDER.index(r["shape"]),
+                             _ARCH_ORDER.index(r["arch"])))
+    return recs
+
+
+def _fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x >= 0.1:
+        return f"{x:.2f}"
+    return f"{x:.1e}"
+
+
+def _gb(x) -> str:
+    return f"{x / 1e9:.2f}"
+
+
+def analytic_compute_s(rec: Dict, peak: float = 197e12) -> float:
+    """Analytic compute term from 6*N_active*D (train, x4/3 for remat's
+    forward recompute => 8ND) or 2*N_active*D (inference), divided over the
+    mesh. Used alongside the HLO term because XLA:CPU cost_analysis does not
+    multiply `while`-loop (scan-over-layers) trip counts."""
+    n, d = rec["active_params"], rec["tokens_per_step"]
+    k = 8.0 if rec["kind"] == "train" else 2.0
+    return k * n * d / rec["chips"] / peak
+
+
+def effective_terms(r: Dict) -> Dict:
+    """Roofline terms with the analytic compute floor applied."""
+    t = dict(r["roofline"])
+    t["compute_analytic_s"] = analytic_compute_s(r)
+    t["compute_eff_s"] = max(t["compute_s"], t["compute_analytic_s"])
+    t["dominant"] = max((("compute", t["compute_eff_s"]),
+                         ("memory", t["memory_s"]),
+                         ("collective", t["collective_s"])),
+                        key=lambda kv: kv[1])[0]
+    total = t["compute_eff_s"] + t["memory_s"] + t["collective_s"]
+    t["roofline_frac"] = t["compute_eff_s"] / total if total else 0.0
+    return t
+
+
+def lever(r: Dict) -> str:
+    """One sentence: what would move the dominant term down."""
+    t = effective_terms(r)
+    dom = t["dominant"]
+    arch, shape, mode = r["arch"], r["shape"], r["dist_mode"]
+    is_moe = arch in ("kimi-k2-1t-a32b", "deepseek-v3-671b", "jamba-v0.1-52b")
+    is_ssm = arch in ("falcon-mamba-7b", "jamba-v0.1-52b")
+    if dom == "collective":
+        if r["kind"] != "train":
+            return ("shard the decode cache/batch deeper and gather weights "
+                    "per-layer-group instead of per-op (serving is "
+                    "weight-gather bound)")
+        if is_moe:
+            return ("shrink the EP combine reduction: bf16 wire (TPU), "
+                    "reduce-scatter + sequence-sharded activations")
+        if mode == "replica":
+            return ("drop TP where the model fits per chip (pure_dp) — "
+                    "gossip's O(1) DP comm is already negligible")
+        return "overlap FSDP gathers with compute; widen the model axis"
+    if dom == "memory":
+        if is_ssm and shape == "train_4k":
+            return "Pallas chunked ssm_scan kernel (VMEM-resident chunks)"
+        if shape in ("prefill_32k", "train_4k"):
+            return ("Pallas flash_attention (fuses the (S,T) score "
+                    "materialization into VMEM tiles)")
+        return "larger per-step batch to raise arithmetic intensity"
+    return "compute-bound: near roofline; only kernel-level MXU tuning left"
+
+
+def roofline_table(recs: List[Dict], with_lever: bool = False) -> str:
+    lev = "| next lever " if with_lever else ""
+    hdr = ("| arch | shape | mesh | temp GB/chip | compute s (HLO/analytic) | "
+           f"memory s | collective s | dominant | compute frac {lev}|\n"
+           "|---|---|---|---|---|---|---|---|---|" + ("---|" if with_lever else "") + "\n")
+    rows = []
+    for r in recs:
+        t = effective_terms(r)
+        mem = r.get("memory_analysis", {})
+        row = (
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{_gb(mem.get('temp_size_in_bytes', 0))} | "
+            f"{_fmt_s(t['compute_s'])} / {_fmt_s(t['compute_analytic_s'])} | "
+            f"{_fmt_s(t['memory_s'])} | {_fmt_s(t['collective_s'])} | "
+            f"**{t['dominant']}** | {t['roofline_frac']:.2f} |")
+        if with_lever:
+            row += f" {lever(r)} |"
+        rows.append(row)
+    return hdr + "\n".join(rows)
+
+
+def collectives_table(recs: List[Dict]) -> str:
+    hdr = ("| arch | shape | mesh | all-gather | all-reduce | reduce-scatter "
+           "| all-to-all | collective-permute | wire GB/chip |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in recs:
+        c = r["collectives"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{_gb(c['all-gather_bytes'])} ({c['all-gather_count']}) | "
+            f"{_gb(c['all-reduce_bytes'])} ({c['all-reduce_count']}) | "
+            f"{_gb(c['reduce-scatter_bytes'])} ({c['reduce-scatter_count']}) | "
+            f"{_gb(c['all-to-all_bytes'])} ({c['all-to-all_count']}) | "
+            f"{_gb(c['collective-permute_bytes'])} "
+            f"({c['collective-permute_count']}) | {_gb(c['wire_bytes'])} |")
+    return hdr + "\n".join(rows)
+
+
+def summary(recs: List[Dict]) -> Dict:
+    doms = {}
+    for r in recs:
+        doms.setdefault(effective_terms(r)["dominant"], []).append(
+            f"{r['arch']}/{r['shape']}")
+    return doms
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--collectives", action="store_true")
+    args = ap.parse_args()
+    recs = load_records(args.dir, args.tag, args.mesh)
+    print(f"{len(recs)} records (tag={args.tag}, mesh={args.mesh or 'all'})\n")
+    print(roofline_table(recs))
+    if args.collectives:
+        print()
+        print(collectives_table(recs))
+    print("\ndominant-term census:")
+    for k, v in summary(recs).items():
+        print(f"  {k}: {len(v)}")
+
+
+if __name__ == "__main__":
+    main()

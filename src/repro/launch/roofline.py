@@ -1,0 +1,170 @@
+"""Roofline terms from a compiled dry-run artifact (TPU v5e targets).
+
+    compute term    = HLO_FLOPs_per_chip / peak_FLOPs
+    memory term     = HLO_bytes_per_chip / HBM_bw
+    collective term = wire_bytes_per_chip / (links * link_bw)
+
+``cost_analysis()`` of an SPMD-partitioned module reports per-device flops /
+bytes. Collective wire bytes are NOT in cost_analysis: we parse the compiled
+per-device HLO and sum operand/result sizes of every collective op, with the
+standard wire-cost weights (ring all-reduce moves ~2x its payload; all-gather
+/ reduce-scatter / all-to-all / collective-permute move ~1x their per-device
+payload). This is a *model*, stated as such in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+__all__ = ["V5E", "Hardware", "collective_bytes", "roofline_terms"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float          # per chip, bf16
+    hbm_bw: float              # bytes/s per chip
+    ici_bw: float              # bytes/s per link
+    ici_links: int = 1         # links engaged per chip (conservative: 1)
+
+
+V5E = Hardware(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+# result-shape(s) before the op name, e.g.
+#   %ag = bf16[4,128]{1,0} all-gather(%p), ...
+#   %ar = (f32[8]{0}, f32[16]{0}) all-reduce(...)
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+(" + "|".join(_COLLECTIVES) + r")(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+# wire-cost multiplier per payload byte (ring algorithms, large-message limit)
+_WIRE_WEIGHT = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)(?: \([^)]*\))? -> .*\{$|^(?:ENTRY )?%?([\w.\-]+) \{$",
+                      re.M)
+_WHILE_RE = re.compile(
+    r"while\([^)]*\), condition=%?([\w.\-]+), body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, str]:
+    """computation-name -> body text (HLO text format)."""
+    comps: Dict[str, str] = {}
+    cur = None
+    buf: list = []
+    for line in hlo_text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line.strip()) if line and not line.startswith(" ") else None
+            if line and not line.startswith(" ") and line.rstrip().endswith("{"):
+                name = line.split()[0].lstrip("%")
+                if name == "ENTRY":
+                    name = line.split()[1].lstrip("%")
+                cur = name
+                buf = []
+        else:
+            if line.startswith("}"):
+                comps[cur] = "\n".join(buf)
+                cur = None
+            else:
+                buf.append(line)
+    return comps
+
+
+def _loop_multipliers(comps: Dict[str, str]) -> Dict[str, float]:
+    """body-computation-name -> estimated trip count. Trip count heuristic:
+    the largest integer constant in the loop's condition computation (XLA
+    lowers lax.scan to `while i < N`). Nested loops multiply."""
+    mult: Dict[str, float] = {name: 1.0 for name in comps}
+    # build parent->child(with trip) edges
+    edges = []
+    for name, body in comps.items():
+        for m in _WHILE_RE.finditer(body):
+            cond, wbody = m.group(1), m.group(2)
+            trip = 1.0
+            ctext = comps.get(cond, "")
+            consts = [int(c) for c in _CONST_RE.findall(ctext)]
+            if consts:
+                trip = float(max(consts))
+            edges.append((name, wbody, trip))
+    # propagate multipliers down the call graph (a few passes suffice)
+    for _ in range(6):
+        changed = False
+        for parent, child, trip in edges:
+            want = mult.get(parent, 1.0) * trip
+            if child in mult and mult[child] < want:
+                mult[child] = want
+                changed = True
+        if not changed:
+            break
+    return mult
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-op-type payload + weighted wire bytes (per chip) from HLO text.
+
+    Loop-aware: collectives inside `while` bodies (lax.scan over layers /
+    chunks) are scaled by the loop's trip count, so a 61-layer scanned stack
+    reports 61x its per-layer collective payload. Trip counts come from the
+    largest constant in each loop's condition computation — a heuristic,
+    stated as such in EXPERIMENTS.md."""
+    comps = _split_computations(hlo_text)
+    if comps:
+        mult = _loop_multipliers(comps)
+    else:  # fallback: flat scan of the whole text
+        comps = {"__all__": hlo_text}
+        mult = {"__all__": 1.0}
+    payload: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for name, body in comps.items():
+        scale = mult.get(name, 1.0)
+        for m in _OP_RE.finditer(body):
+            shape_text, op = m.group(1), m.group(2)
+            b = _shape_bytes(shape_text)
+            payload[op] += b * scale
+            counts[op] += scale
+    wire = sum(_WIRE_WEIGHT[k] * v for k, v in payload.items())
+    out = {f"{k}_bytes": v for k, v in payload.items()}
+    out.update({f"{k}_count": counts[k] for k in _COLLECTIVES})
+    out["wire_bytes"] = wire
+    return out
+
+
+def roofline_terms(flops_per_chip: float, bytes_per_chip: float,
+                   wire_bytes_per_chip: float,
+                   hw: Hardware = V5E) -> Dict[str, float]:
+    compute = flops_per_chip / hw.peak_flops
+    memory = bytes_per_chip / hw.hbm_bw
+    collective = wire_bytes_per_chip / (hw.ici_bw * hw.ici_links)
+    dominant = max((("compute", compute), ("memory", memory),
+                    ("collective", collective)), key=lambda kv: kv[1])[0]
+    return {"compute_s": compute, "memory_s": memory,
+            "collective_s": collective, "dominant": dominant}

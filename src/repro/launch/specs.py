@@ -1,0 +1,138 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run's inputs.
+
+Nothing here allocates: state/batch/cache trees come from ``jax.eval_shape``
+over the real init functions, so the dry-run lowers the exact program the
+real launcher runs. For [audio]/[vlm] archs the stub frontend contributes
+frame/patch-embedding inputs of the right shape (assignment carve-out).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (LONG_CONTEXT_WINDOW, SHAPES, get_config,
+                           with_sliding_window)
+from repro.models import lm_cache_init, lm_init
+from repro.models.config import ModelConfig
+from repro.models.layers import dtype_of
+from repro.optim import Optimizer
+from repro.train import Distribution, init_train_state
+from repro.train.step import init_train_state as _init_state
+
+PyTree = Any
+
+__all__ = ["resolve_config", "train_input_specs", "serve_input_specs",
+           "param_count", "active_param_count"]
+
+
+def resolve_config(arch: str, shape: str) -> Tuple[ModelConfig, Dict]:
+    """Arch config specialized for the input shape. ``long_500k`` swaps
+    full attention for the documented sliding-window variant (sub-quadratic
+    decode cache) — SSM/windowed archs run unmodified."""
+    cfg = get_config(arch)
+    notes = {}
+    if shape == "long_500k" and not cfg.subquadratic():
+        cfg = with_sliding_window(cfg, LONG_CONTEXT_WINDOW)
+        notes["variant"] = f"sliding_window_{LONG_CONTEXT_WINDOW}"
+    return cfg, notes
+
+
+def _batch_struct(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def train_input_specs(cfg: ModelConfig, dist: Distribution, seq_len: int,
+                      global_batch: int, optimizer: Optimizer
+                      ) -> Tuple[PyTree, PyTree, PyTree]:
+    """(state_shapes, state_axes, batch_shapes) as ShapeDtypeStructs."""
+    dp = max(dist.dp, 1)
+    assert global_batch % dp == 0, (global_batch, dp)
+    local_b = global_batch // dp
+    # axes annotations are static strings: capture them as a trace side
+    # effect (eval_shape outputs must be arrays)
+    box = {}
+
+    def _shapes_only():
+        state, axes = _init_state(jax.random.key(0), cfg, dist, optimizer)
+        box["axes"] = axes
+        return state
+
+    state_shapes = jax.eval_shape(_shapes_only)
+    state_axes = box["axes"]
+    emb_dtype = dtype_of(cfg.compute_dtype)
+    batch: Dict[str, Any] = {}
+    n_img = cfg.vision.n_image_tokens if cfg.vision is not None else 0
+    text_len = seq_len - n_img
+    assert text_len > 2, "image tokens exceed sequence budget"
+    batch["tokens"] = _batch_struct((dp, local_b, text_len + 1), jnp.int32)
+    if cfg.vision is not None:
+        batch["image_embeds"] = _batch_struct(
+            (dp, local_b, n_img, cfg.d_model), emb_dtype)
+    if cfg.encoder is not None:
+        batch["audio_frames"] = _batch_struct(
+            (dp, local_b, cfg.encoder.n_frames, cfg.d_model), emb_dtype)
+    return state_shapes, state_axes, batch
+
+
+def serve_input_specs(cfg: ModelConfig, dist: Distribution, seq_len: int,
+                      global_batch: int, kind: str) -> Dict[str, Any]:
+    """Specs for serve steps. kind: "decode" | "prefill".
+
+    decode: {params, cache(seq_len), token (B,), pos ()}
+    prefill: {params, cache(seq_len), tokens (B,S)} (+stub embeddings)
+    """
+    box = {}
+
+    def _shapes_only():
+        params, axes = lm_init(jax.random.key(0), cfg)
+        box["axes"] = axes
+        return params
+
+    params_shapes = jax.eval_shape(_shapes_only)
+    params_axes = box["axes"]
+    cache_dtype = dtype_of(cfg.param_dtype)
+    cache_shapes = jax.eval_shape(
+        lambda: lm_cache_init(cfg, global_batch, seq_len, cache_dtype))
+    out = {"params": params_shapes, "params_axes": params_axes,
+           "cache": cache_shapes}
+    emb_dtype = dtype_of(cfg.compute_dtype)
+    if kind == "decode":
+        out["token"] = _batch_struct((global_batch,), jnp.int32)
+        out["pos"] = _batch_struct((), jnp.int32)
+    else:
+        n_img = cfg.vision.n_image_tokens if cfg.vision is not None else 0
+        text_len = seq_len - n_img
+        out["tokens"] = _batch_struct((global_batch, text_len), jnp.int32)
+        if cfg.vision is not None:
+            out["image_embeds"] = _batch_struct(
+                (global_batch, n_img, cfg.d_model), emb_dtype)
+        if cfg.encoder is not None:
+            out["audio_frames"] = _batch_struct(
+                (global_batch, cfg.encoder.n_frames, cfg.d_model), emb_dtype)
+    return out
+
+
+def param_count(params_shapes: PyTree) -> int:
+    return int(sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params_shapes)))
+
+
+def active_param_count(cfg: ModelConfig, params_shapes: PyTree) -> int:
+    """Parameters touched per token: MoE expert tensors scale by top_k/E
+    (+ shared); everything else counts fully. Used for MODEL_FLOPS = 6*N*D."""
+    total = 0
+    flat = jax.tree_util.tree_flatten_with_path(params_shapes)[0]
+    moe = next((b.moe for b in cfg.blocks if b.moe is not None), None)
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        n = int(np.prod(leaf.shape))
+        if moe is not None and ("'ff'" in key) and ("w_gate" in key or
+                                                    "w_in" in key or
+                                                    "w_out" in key):
+            n = int(n * moe.top_k / moe.n_experts)
+        total += n
+    return total

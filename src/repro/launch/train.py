@@ -1,0 +1,93 @@
+"""Training launcher CLI.
+
+On real hardware this drives the production mesh; on this container it runs
+reduced configs on the single CPU device (--smoke, default when only one
+device is present). The gossip phase cycles through the schedule with one
+compiled step per phase (static mode).
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch qwen3-0.6b --protocol gossip --steps 50 --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.checkpoint import save_state
+from repro.configs import get_config, list_archs
+from repro.data import ShardedTokenDataset
+from repro.launch.mesh import make_production_mesh, make_smoke_mesh
+from repro.launch.specs import train_input_specs
+from repro.models import reduced
+from repro.optim import scale_lr_sqrt_p, sgd, step_decay
+from repro.train import (Trainer, init_train_state, make_distribution,
+                         make_train_step_bundle)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen3-0.6b", choices=list_archs())
+    ap.add_argument("--protocol", default="gossip",
+                    choices=["gossip", "agd", "every_logp", "none"])
+    ap.add_argument("--topology", default="dissemination",
+                    choices=["dissemination", "hypercube"])
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--num-rotations", type=int, default=2)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on the local device mesh")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke or len(jax.devices()) == 1:
+        cfg = dataclasses.replace(
+            reduced(cfg, d_model=args.d_model),
+            param_dtype="float32", compute_dtype="float32")
+        mesh = make_smoke_mesh(1, 1)
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    dist = make_distribution(mesh, cfg.dist_mode)
+
+    lr = step_decay(args.lr, 0.1, max(args.steps // 3, 1))
+    if args.protocol == "agd":
+        # Krizhevsky weak-scaling rule, AGD only (paper §7.1)
+        lr = scale_lr_sqrt_p(lr, max(dist.dp, 1))
+    opt = sgd(lr, momentum=0.9)
+
+    state_shapes, state_axes, batch_shapes = train_input_specs(
+        cfg, dist, args.seq_len, args.global_batch, opt)
+    bundle = make_train_step_bundle(
+        cfg, dist, opt, state_shapes=state_shapes, state_axes=state_axes,
+        batch_shapes=batch_shapes, protocol=args.protocol,
+        topology=args.topology, num_rotations=args.num_rotations,
+        remat=not (args.smoke or len(jax.devices()) == 1))
+    state, _ = init_train_state(jax.random.key(0), cfg, dist, opt)
+
+    ds = ShardedTokenDataset(cfg.vocab, args.seq_len,
+                             n_shards=max(dist.dp, 1),
+                             batch_per_shard=args.global_batch // max(dist.dp, 1))
+    trainer = Trainer(bundle, state, ds, log_every=args.log_every)
+    hist = trainer.run(args.steps)
+    print(json.dumps({"arch": cfg.name, "protocol": args.protocol,
+                      "final_loss": hist[-1]["loss"],
+                      "first_loss": hist[0]["loss"]}))
+    if args.checkpoint:
+        save_state(args.checkpoint, trainer.state,
+                   metadata={"arch": cfg.name, "protocol": args.protocol},
+                   step=args.steps)
+        print(f"checkpoint -> {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

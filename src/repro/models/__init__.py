@@ -1,0 +1,6 @@
+"""Model zoo: configs, blocks, and the functional LM builders."""
+from .config import (AttnSpec, AudioStubSpec, BlockSpec, EncoderSpec, MLASpec,
+                     ModelConfig, MoESpec, SSMSpec, VisionStubSpec, reduced)
+from .transformer import (encode_audio, lm_apply, lm_cache_init, lm_decode,
+                          lm_init, lm_prefill)
+from .blocks import segments_of

@@ -1,0 +1,323 @@
+"""Residual blocks and the depth stacker.
+
+A block is pre-norm residual: ``h += mixer(norm1(h))`` then, if present,
+``h += (mlp|moe)(norm2(h))``; enc-dec decoder blocks insert a cross-attention
+sub-layer between the two.
+
+The stacker groups the per-layer BlockSpec list into *segments* — a repeating
+pattern of P distinct specs applied R times — and runs ``lax.scan`` over R
+with params stacked on a leading repeat axis. This keeps compiled HLO size
+O(P), not O(L): dense archs give (P=1, R=L); Jamba's mamba/attn/MoE interleave
+gives (P=8, R=4); DeepSeek-V3's 3-dense-then-58-MoE gives two segments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import mamba as mamba_mod
+from . import moe as moe_mod
+from .config import BlockSpec, ModelConfig
+from .layers import mlp_apply, mlp_init, norm_apply, norm_init
+
+PyTree = Any
+
+AUX_KEYS = ("moe_aux", "moe_dropped_frac")
+
+__all__ = ["segments_of", "stack_init", "stack_apply", "stack_decode",
+           "stack_cache_init", "stack_prefill", "AUX_KEYS"]
+
+
+# ----------------------------------------------------------------- grouping
+def segments_of(blocks: Sequence[BlockSpec]) -> List[Tuple[Tuple[BlockSpec, ...], int]]:
+    """[(pattern, repeats), ...] — periodic if possible, else maximal runs."""
+    L = len(blocks)
+    for P in range(1, min(16, L - 1) + 1):
+        if L % P == 0 and all(blocks[i] == blocks[i % P] for i in range(L)):
+            return [(tuple(blocks[:P]), L // P)]
+    segs: List[Tuple[Tuple[BlockSpec, ...], int]] = []
+    i = 0
+    while i < L:
+        j = i
+        while j < L and blocks[j] == blocks[i]:
+            j += 1
+        segs.append(((blocks[i],), j - i))
+        i = j
+    return segs
+
+
+# ----------------------------------------------------------------- one block
+def block_init(key, cfg: ModelConfig, spec: BlockSpec, dtype):
+    ks = jax.random.split(key, 4)
+    p: Dict = {}
+    a: Dict = {}
+    p["norm1"], a["norm1"] = norm_init(cfg.norm, cfg.d_model, dtype)
+    if spec.kind == "attn":
+        p["mixer"], a["mixer"] = attn_mod.attn_init(ks[0], cfg.d_model, spec.attn, dtype)
+    elif spec.kind == "mla":
+        p["mixer"], a["mixer"] = attn_mod.mla_init(ks[0], cfg.d_model, spec.mla, dtype)
+    elif spec.kind == "mamba":
+        p["mixer"], a["mixer"] = mamba_mod.mamba_init(ks[0], cfg.d_model, spec.ssm, dtype)
+    else:
+        raise ValueError(spec.kind)
+    if spec.cross_attn is not None:
+        p["norm_x"], a["norm_x"] = norm_init(cfg.norm, cfg.d_model, dtype)
+        p["cross"], a["cross"] = attn_mod.attn_init(ks[1], cfg.d_model, spec.cross_attn, dtype)
+    if spec.moe is not None:
+        p["norm2"], a["norm2"] = norm_init(cfg.norm, cfg.d_model, dtype)
+        p["ff"], a["ff"] = moe_mod.moe_init(ks[2], cfg.d_model, spec.moe, dtype)
+    elif spec.d_ff:
+        p["norm2"], a["norm2"] = norm_init(cfg.norm, cfg.d_model, dtype)
+        p["ff"], a["ff"] = mlp_init(ks[2], cfg.d_model, spec.d_ff, spec.mlp_act, dtype)
+    return p, a
+
+
+def _zero_aux() -> Dict[str, jnp.ndarray]:
+    return {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+
+
+def block_apply(p, cfg: ModelConfig, spec: BlockSpec, h: jnp.ndarray,
+                memory: Optional[jnp.ndarray] = None,
+                positions: Optional[jnp.ndarray] = None,
+                ssm_scan_impl=None) -> Tuple[jnp.ndarray, Dict]:
+    aux = _zero_aux()
+    x = norm_apply(cfg.norm, p["norm1"], h)
+    if spec.kind == "attn":
+        h = h + attn_mod.attn_apply(p["mixer"], spec.attn, x, positions=positions)
+    elif spec.kind == "mla":
+        h = h + attn_mod.mla_apply(p["mixer"], spec.mla, x, positions=positions)
+    else:
+        h = h + mamba_mod.mamba_apply(p["mixer"], spec.ssm, cfg.d_model, x,
+                                      scan_impl=ssm_scan_impl)
+    if spec.cross_attn is not None:
+        xc = norm_apply(cfg.norm, p["norm_x"], h)
+        h = h + attn_mod.attn_apply(p["cross"], spec.cross_attn, xc, memory=memory)
+    if spec.moe is not None:
+        x2 = norm_apply(cfg.norm, p["norm2"], h)
+        y, m = moe_mod.moe_apply(p["ff"], spec.moe, x2)
+        aux = {**aux, **{k: jnp.asarray(v, jnp.float32) for k, v in m.items()}}
+        h = h + y
+    elif spec.d_ff:
+        x2 = norm_apply(cfg.norm, p["norm2"], h)
+        h = h + mlp_apply(p["ff"], x2, spec.mlp_act)
+    return h, aux
+
+
+# ----------------------------------------------------------------- caches
+def block_cache_init(cfg: ModelConfig, spec: BlockSpec, batch: int,
+                     seq_len: int, dtype, n_frames: int = 0):
+    c: Dict = {}
+    if spec.kind == "attn":
+        c["kv"] = attn_mod.attn_cache_init(spec.attn, batch, seq_len, dtype)
+    elif spec.kind == "mla":
+        c["kv"] = attn_mod.mla_cache_init(spec.mla, batch, seq_len, dtype)
+    else:
+        c["ssm"] = mamba_mod.mamba_state_init(spec.ssm, cfg.d_model, batch, dtype)
+    if spec.cross_attn is not None:
+        ca = spec.cross_attn
+        shp = (batch, n_frames, ca.n_kv_heads, ca.head_dim)
+        c["mem_k"] = jnp.zeros(shp, dtype)
+        c["mem_v"] = jnp.zeros(shp, dtype)
+    return c
+
+
+def block_decode(p, cfg: ModelConfig, spec: BlockSpec, h: jnp.ndarray,
+                 cache: Dict, pos) -> Tuple[jnp.ndarray, Dict]:
+    x = norm_apply(cfg.norm, p["norm1"], h)
+    new_cache = dict(cache)
+    if spec.kind == "attn":
+        y, new_cache["kv"] = attn_mod.attn_decode(p["mixer"], spec.attn, x, cache["kv"], pos)
+    elif spec.kind == "mla":
+        y, new_cache["kv"] = attn_mod.mla_decode(p["mixer"], spec.mla, x, cache["kv"], pos)
+    else:
+        y, new_cache["ssm"] = mamba_mod.mamba_decode(p["mixer"], spec.ssm, cfg.d_model, x, cache["ssm"])
+    h = h + y
+    if spec.cross_attn is not None:
+        xc = norm_apply(cfg.norm, p["norm_x"], h)
+        y, _ = attn_mod.attn_decode(p["cross"], spec.cross_attn, xc, {},
+                                    pos, memory_kv=(cache["mem_k"], cache["mem_v"]))
+        h = h + y
+    if spec.moe is not None:
+        x2 = norm_apply(cfg.norm, p["norm2"], h)
+        y, _ = moe_mod.moe_apply(p["ff"], spec.moe, x2)
+        h = h + y
+    elif spec.d_ff:
+        x2 = norm_apply(cfg.norm, p["norm2"], h)
+        h = h + mlp_apply(p["ff"], x2, spec.mlp_act)
+    return h, new_cache
+
+
+def _cache_write_seq(cache_arr: jnp.ndarray, full: jnp.ndarray) -> jnp.ndarray:
+    """Write a full prefill sequence (positions 0..S-1, axis 1) into a decode
+    cache of length L. If L < S (sliding-window ring buffer), keep the last L
+    positions at their ring slots (pos % L); else write at the front."""
+    L = cache_arr.shape[1]
+    S = full.shape[1]
+    full = full.astype(cache_arr.dtype)
+    if S <= L:
+        return jax.lax.dynamic_update_slice(
+            cache_arr, full, (0,) * cache_arr.ndim)
+    tail = full[:, S - L:]
+    return jnp.roll(tail, shift=(S - L) % L, axis=1)
+
+
+def block_prefill(p, cfg: ModelConfig, spec: BlockSpec, h: jnp.ndarray,
+                  cache: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """Full-sequence forward that also fills this block's decode cache (used
+    by the serving path's prefill). Windowed layers keep the trailing window
+    in their ring buffer; full-attention layers need seq <= cache length."""
+    S = h.shape[1]
+    x = norm_apply(cfg.norm, p["norm1"], h)
+    new_cache = dict(cache)
+    if spec.kind == "attn":
+        a = spec.attn
+        q, k, v = attn_mod._project_qkv(
+            p["mixer"], a, x, x, jnp.arange(S)[None], jnp.arange(S)[None])
+        new_cache["kv"] = {"k": _cache_write_seq(cache["kv"]["k"], k),
+                           "v": _cache_write_seq(cache["kv"]["v"], v)}
+        mask = attn_mod.causal_window_mask(S, S, a.window)
+        out = attn_mod._sdpa(q, k, v, mask, a.n_kv_heads)
+        h = h + jnp.einsum("bshk,hkd->bsd", out, p["mixer"]["wo"])
+    elif spec.kind == "mla":
+        # cache latents for all positions, output via the full-train path
+        m = spec.mla
+        c_kv, k_rope = attn_mod._mla_latent_kv(
+            p["mixer"], m, x, jnp.arange(S)[None])
+        new_cache["kv"] = {
+            "c_kv": _cache_write_seq(cache["kv"]["c_kv"], c_kv),
+            "k_rope": _cache_write_seq(cache["kv"]["k_rope"], k_rope)}
+        h = h + attn_mod.mla_apply(p["mixer"], m, x)
+    else:
+        s = spec.ssm
+        dt_rank = s.resolved_dt_rank(cfg.d_model)
+        xz = x @ p["mixer"]["in_proj"]
+        xi_pre, z = jnp.split(xz, 2, axis=-1)
+        xi = mamba_mod.silu(mamba_mod._conv_causal(
+            xi_pre, p["mixer"]["conv_w"], p["mixer"]["conv_b"]))
+        dA, dBx, C = mamba_mod._ssm_inputs(p["mixer"], s, xi, dt_rank)
+        hs = mamba_mod.ssm_assoc_scan(dA, dBx)
+        # conv state carries the PRE-conv tail (what decode's window needs)
+        new_cache["ssm"] = {"h": hs[:, -1],
+                            "conv": xi_pre[:, -(s.d_conv - 1):].astype(
+                                cache["ssm"]["conv"].dtype)}
+        y = jnp.einsum("bsdn,bsn->bsd", hs, C.astype(jnp.float32)).astype(x.dtype)
+        y = (y + p["mixer"]["D"] * xi) * mamba_mod.silu(z)
+        h = h + y @ p["mixer"]["out_proj"]
+    if spec.cross_attn is not None:
+        xc = norm_apply(cfg.norm, p["norm_x"], h)
+        y, _ = attn_mod.attn_decode(p["cross"], spec.cross_attn, xc, {}, 0,
+                                    memory_kv=(cache["mem_k"], cache["mem_v"]))
+        h = h + y
+    if spec.moe is not None:
+        x2 = norm_apply(cfg.norm, p["norm2"], h)
+        y, _ = moe_mod.moe_apply(p["ff"], spec.moe, x2)
+        h = h + y
+    elif spec.d_ff:
+        x2 = norm_apply(cfg.norm, p["norm2"], h)
+        h = h + mlp_apply(p["ff"], x2, spec.mlp_act)
+    return h, new_cache
+
+
+# ----------------------------------------------------------------- stacker
+def stack_init(key, cfg: ModelConfig, blocks: Sequence[BlockSpec], dtype):
+    """Params: list over segments; each segment is a list over pattern
+    positions of block params stacked on a leading repeat axis."""
+    segs = segments_of(blocks)
+    params, axes = [], []
+    for si, (pattern, R) in enumerate(segs):
+        seg_p, seg_a = [], []
+        for pi, spec in enumerate(pattern):
+            keys = jax.random.split(jax.random.fold_in(key, si * 64 + pi), R)
+            stacked = jax.vmap(lambda k: block_init(k, cfg, spec, dtype)[0])(keys)
+            _, a = block_init(keys[0], cfg, spec, dtype)
+            seg_p.append(stacked)
+            # leading repeat axis is unannotated -> prepend empty segment
+            seg_a.append(jax.tree.map(lambda s: "," + s, a))
+        params.append(seg_p)
+        axes.append(seg_a)
+    return params, axes, segs
+
+
+def stack_apply(params, cfg: ModelConfig, segs, h: jnp.ndarray,
+                memory=None, positions=None, ssm_scan_impl=None,
+                remat: bool = False, remat_policy: str | None = None):
+    """``remat=True`` checkpoints each scan body (per-layer-group remat): the
+    backward pass recomputes a layer's internals from its input instead of
+    saving attention probs / MoE buffers for the whole depth — the standard
+    activation-checkpoint policy for deep stacks.
+
+    ``remat_policy="save_moe_combine"`` additionally saves each MoE layer's
+    combined output so the backward recompute never replays the expert-
+    parallel all-reduce (collective-bytes optimization, §Perf)."""
+    aux_tot = _zero_aux()
+    policy = None
+    if remat_policy == "save_moe_combine":
+        policy = jax.checkpoint_policies.save_only_these_names("moe_combine")
+    elif remat_policy == "dots":
+        # save weight-matmul outputs (not attention scores): trades a little
+        # VMEM/HBM for skipping most of the recompute pass — right when the
+        # memory term has headroom (e.g. pure_dp small models, §Perf Q2)
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    for (pattern, R), seg_p in zip(segs, params):
+        def body(carry, xs):
+            hh, aux = carry
+            for spec, bp in zip(pattern, xs):
+                hh, a = block_apply(bp, cfg, spec, hh, memory=memory,
+                                    positions=positions,
+                                    ssm_scan_impl=ssm_scan_impl)
+                aux = {k: aux[k] + a[k] for k in AUX_KEYS}
+            return (hh, aux), None
+
+        if remat:
+            body = jax.checkpoint(body, policy=policy)
+        (h, aux_tot), _ = jax.lax.scan(body, (h, aux_tot), tuple(seg_p))
+    return h, aux_tot
+
+
+def stack_cache_init(cfg: ModelConfig, segs, batch: int, seq_len: int, dtype,
+                     n_frames: int = 0):
+    caches = []
+    for pattern, R in segs:
+        seg_c = []
+        for spec in pattern:
+            one = block_cache_init(cfg, spec, batch, seq_len, dtype, n_frames)
+            seg_c.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (R,) + x.shape), one))
+        caches.append(seg_c)
+    return caches
+
+
+def stack_decode(params, cfg: ModelConfig, segs, h: jnp.ndarray, caches, pos):
+    new_caches = []
+    for (pattern, R), seg_p, seg_c in zip(segs, params, caches):
+        def body(hh, xs):
+            ps, cs = xs
+            outs = []
+            for spec, bp, bc in zip(pattern, ps, cs):
+                hh, nc = block_decode(bp, cfg, spec, hh, bc, pos)
+                outs.append(nc)
+            return hh, tuple(outs)
+
+        h, nc = jax.lax.scan(body, h, (tuple(seg_p), tuple(seg_c)))
+        new_caches.append(list(nc))
+    return h, new_caches
+
+
+def stack_prefill(params, cfg: ModelConfig, segs, h: jnp.ndarray, caches):
+    new_caches = []
+    for (pattern, R), seg_p, seg_c in zip(segs, params, caches):
+        def body(hh, xs):
+            ps, cs = xs
+            outs = []
+            for spec, bp, bc in zip(pattern, ps, cs):
+                hh, nc = block_prefill(bp, cfg, spec, hh, bc)
+                outs.append(nc)
+            return hh, tuple(outs)
+
+        h, nc = jax.lax.scan(body, h, (tuple(seg_p), tuple(seg_c)))
+        new_caches.append(list(nc))
+    return h, new_caches

@@ -1,0 +1,203 @@
+"""Model configuration schema for the architecture zoo.
+
+A model is a stack of per-layer ``BlockSpec``s over a shared embedding /
+unembedding, optionally preceded by an encoder (audio enc-dec) or a modality
+embedding injection (VLM). BlockSpecs are hashable so the layer stacker can
+detect periodic patterns and scan over repeats (keeps HLO size independent of
+depth — essential for 61-layer dry-run compiles on one CPU core).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+__all__ = [
+    "AttnSpec", "MLASpec", "SSMSpec", "MoESpec", "BlockSpec", "EncoderSpec",
+    "VisionStubSpec", "AudioStubSpec", "ModelConfig", "reduced",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    """Multi-head attention (MHA/GQA) with optional qk-norm / partial rotary /
+    sliding window. ``window=None`` means full causal attention."""
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    rope_frac: float = 1.0          # stablelm-2 uses 0.25 (partial rotary)
+    rope_theta: float = 10000.0
+    window: Optional[int] = None    # sliding-window size (sub-quadratic variant)
+    causal: bool = True             # encoder self-attn sets False
+    cross: bool = False             # decoder cross-attention (enc-dec only)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLASpec:
+    """DeepSeek-V3 Multi-head Latent Attention [arXiv:2412.19437]."""
+    n_heads: int
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10000.0
+    window: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMSpec:
+    """Mamba-1 selective SSM [arXiv:2312.00752 / falcon-mamba 2410.05355]."""
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: Optional[int] = None   # default ceil(d_model/16)
+
+    def resolved_dt_rank(self, d_model: int) -> int:
+        return self.dt_rank if self.dt_rank is not None else max(1, math.ceil(d_model / 16))
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    """Top-k routed mixture of experts with optional shared expert."""
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0               # DeepSeek-V3: 1 shared expert
+    capacity_factor: float = 1.25
+    aux_coef: float = 0.01          # load-balance loss weight
+    router_scale: bool = True       # normalize top-k weights to sum 1
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    """One residual layer: attention OR mamba mixer, then dense-MLP OR MoE.
+
+    ``kind``: "attn" | "mla" | "mamba". ``d_ff > 0`` selects a dense (Swi)GLU
+    MLP; ``moe`` selects a routed MoE; both None/0 means mixer-only layer
+    (mamba-1 blocks have no separate MLP).
+    """
+    kind: str
+    attn: Optional[AttnSpec] = None
+    mla: Optional[MLASpec] = None
+    ssm: Optional[SSMSpec] = None
+    cross_attn: Optional[AttnSpec] = None   # enc-dec decoder blocks
+    d_ff: int = 0
+    moe: Optional[MoESpec] = None
+    mlp_act: str = "swiglu"         # "swiglu" | "gelu"
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderSpec:
+    """Audio encoder stack (whisper-style). The conv/mel frontend is a STUB
+    per assignment: inputs are precomputed frame embeddings (B, n_frames, d)."""
+    n_layers: int
+    n_frames: int
+    attn: AttnSpec = None
+    d_ff: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class VisionStubSpec:
+    """VLM vision tower STUB per assignment: inputs are precomputed patch
+    embeddings (B, n_image_tokens, d_model). anyres tiling is realized as the
+    token count (base 576 + 4 tiles x 576 for llava-next)."""
+    n_image_tokens: int
+
+
+@dataclasses.dataclass(frozen=True)
+class AudioStubSpec:
+    n_frames: int                   # whisper-base: 1500 post-conv frames
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    vocab: int
+    blocks: Tuple[BlockSpec, ...]
+    norm: str = "rms"               # "rms" | "ln" | "nonparam" (olmo)
+    tie_embeddings: bool = False
+    encoder: Optional[EncoderSpec] = None       # whisper
+    vision: Optional[VisionStubSpec] = None     # llava
+    mtp: bool = False               # DeepSeek-V3 multi-token prediction head
+    mtp_coef: float = 0.3
+    max_seq: int = 8192
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    # distribution mode: "replica" = one distinct model per data rank
+    # (paper's pure data parallelism); "fsdp" = one logical copy sharded over
+    # data+model, gossip replicas live on the pod axis only (hierarchical).
+    dist_mode: str = "replica"
+    source: str = ""                # citation bracket from the assignment
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.blocks)
+
+    def block_kinds(self) -> Tuple[str, ...]:
+        return tuple(b.kind for b in self.blocks)
+
+    def has_ssm(self) -> bool:
+        return any(b.kind == "mamba" for b in self.blocks)
+
+    def subquadratic(self) -> bool:
+        """True if decode state is O(1)/O(window) per token: every attention
+        layer is windowed or the model is attention-free."""
+        for b in self.blocks:
+            if b.kind == "attn" and b.attn.window is None:
+                return False
+            if b.kind == "mla" and b.mla.window is None:
+                return False
+        return True
+
+
+def _shrink_attn(a: Optional[AttnSpec], heads: int, head_dim: int) -> Optional[AttnSpec]:
+    if a is None:
+        return None
+    return dataclasses.replace(
+        a, n_heads=heads, n_kv_heads=min(a.n_kv_heads, heads), head_dim=head_dim,
+        window=min(a.window, 64) if a.window else None)
+
+
+def reduced(cfg: ModelConfig, *, n_layers: int = 2, d_model: int = 128,
+            vocab: int = 512) -> ModelConfig:
+    """Smoke-test variant of the same family: <=2 layers, d_model<=512,
+    <=4 experts, tiny vocab — runs a forward/train step on one CPU."""
+    heads = 4
+    head_dim = d_model // heads
+    blocks = []
+    for b in cfg.blocks[:n_layers]:
+        attn = _shrink_attn(b.attn, heads, head_dim)
+        mla = None
+        if b.mla is not None:
+            mla = dataclasses.replace(
+                b.mla, n_heads=heads, q_lora_rank=32, kv_lora_rank=16,
+                qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16,
+                window=min(b.mla.window, 64) if b.mla.window else None)
+        ssm = None
+        if b.ssm is not None:
+            ssm = dataclasses.replace(b.ssm, d_state=8, dt_rank=max(1, d_model // 16))
+        moe = None
+        if b.moe is not None:
+            moe = dataclasses.replace(
+                b.moe, n_experts=4, top_k=min(b.moe.top_k, 2),
+                d_ff_expert=2 * d_model, n_shared=min(b.moe.n_shared, 1))
+        blocks.append(dataclasses.replace(
+            b, attn=attn, mla=mla, ssm=ssm, moe=moe,
+            d_ff=(2 * d_model if b.d_ff else 0)))
+    # pad pattern to n_layers if the source had fewer distinct leading blocks
+    while len(blocks) < n_layers:
+        blocks.append(blocks[-1])
+    encoder = None
+    if cfg.encoder is not None:
+        encoder = EncoderSpec(
+            n_layers=1, n_frames=16,
+            attn=_shrink_attn(cfg.encoder.attn, heads, head_dim),
+            d_ff=2 * d_model)
+    vision = VisionStubSpec(n_image_tokens=8) if cfg.vision is not None else None
+    return dataclasses.replace(
+        cfg, name=cfg.name + "-smoke", d_model=d_model, vocab=vocab,
+        blocks=tuple(blocks), encoder=encoder, vision=vision,
+        max_seq=256, dist_mode="replica")

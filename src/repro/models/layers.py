@@ -1,0 +1,130 @@
+"""Shared layers: parameter creation with logical axes, norms, MLPs, embeds.
+
+Every parameter leaf is created alongside a *logical axes* annotation (tuple
+of strings / None, one per array dim). The distribution layer maps logical
+axes -> mesh axes per architecture mode (tensor-parallel "model" axis, FSDP
+"data" axis), so sharding rules live in one place (``repro.train.sharding``)
+instead of being scattered through the model code.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = [
+    "Param", "dense_param", "norm_apply", "norm_init", "mlp_init", "mlp_apply",
+    "embed_init", "silu", "gelu", "dtype_of", "ax", "ax_names",
+]
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def ax(*names) -> str:
+    """Encode a logical-axes annotation as one atomic string leaf
+    ("embed,heads,head_dim"; empty segment = unannotated dim). Strings are
+    pytree leaves, so axes trees map 1:1 onto param trees under tree.map."""
+    return ",".join("" if n is None else str(n) for n in names)
+
+
+def ax_names(annotation: str) -> Tuple[Optional[str], ...]:
+    return tuple(n if n else None for n in annotation.split(","))
+
+
+def Param(key, shape, axes, *, scale: Optional[float] = None,
+          dtype=jnp.float32, init: str = "normal") -> Tuple[jnp.ndarray, str]:
+    """Create one parameter leaf + its logical-axes annotation."""
+    assert len(shape) == len(axes), (shape, axes)
+    if init == "zeros":
+        w = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        w = jnp.ones(shape, dtype)
+    else:
+        if scale is None:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+        w = (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+    return w, ax(*axes)
+
+
+def dense_param(key, d_in: int, out_shape, in_axis: str, out_axes, *,
+                dtype=jnp.float32, scale=None):
+    """Weight (d_in, *out_shape) with fan-in init."""
+    shape = (d_in,) + tuple(out_shape)
+    axes = (in_axis,) + tuple(out_axes)
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    return Param(key, shape, axes, scale=scale, dtype=dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+# ---------------------------------------------------------------- norms
+def norm_init(kind: str, d: int, dtype=jnp.float32):
+    """rms: learnable scale; ln: scale+bias; nonparam: no params (OLMo-1B's
+    non-parametric LayerNorm [arXiv:2402.00838])."""
+    if kind == "nonparam":
+        return {}, {}
+    if kind == "rms":
+        p, a = Param(None, (d,), ("embed",), init="ones", dtype=dtype)
+        return {"scale": p}, {"scale": a}
+    if kind == "ln":
+        s, sa = Param(None, (d,), ("embed",), init="ones", dtype=dtype)
+        b, ba = Param(None, (d,), ("embed",), init="zeros", dtype=dtype)
+        return {"scale": s, "bias": b}, {"scale": sa, "bias": ba}
+    raise ValueError(kind)
+
+
+def norm_apply(kind: str, params: Dict, x: jnp.ndarray, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rms":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        y = y * params["scale"].astype(jnp.float32)
+    else:  # ln / nonparam
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        if kind == "ln":
+            y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- MLP
+def mlp_init(key, d: int, d_ff: int, act: str, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p, a = {}, {}
+    if act == "swiglu":
+        p["w_gate"], a["w_gate"] = dense_param(ks[0], d, (d_ff,), "embed", ("ffn",), dtype=dtype)
+    p["w_in"], a["w_in"] = dense_param(ks[1], d, (d_ff,), "embed", ("ffn",), dtype=dtype)
+    p["w_out"], a["w_out"] = dense_param(ks[2], d_ff, (d,), "ffn", ("embed",), dtype=dtype)
+    return p, a
+
+
+def mlp_apply(params: Dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    h = x @ params["w_in"]
+    if act == "swiglu":
+        h = silu(x @ params["w_gate"]) * h
+    elif act == "gelu":
+        h = gelu(h)
+    else:
+        raise ValueError(act)
+    return h @ params["w_out"]
+
+
+# ---------------------------------------------------------------- embedding
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    p, a = Param(key, (vocab, d), ("vocab", "embed"), scale=0.02, dtype=dtype)
+    return p, a

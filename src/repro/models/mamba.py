@@ -1,0 +1,174 @@
+"""Mamba-1 selective SSM mixer (falcon-mamba [arXiv:2410.05355], Jamba's
+mamba layers [arXiv:2403.19887]).
+
+Train path uses an associative scan over the sequence (O(S log S) depth,
+TPU-friendly); decode path carries O(1) recurrent state per layer:
+``(B, d_inner, d_state)`` SSM state + ``(B, d_conv-1, d_inner)`` conv tail —
+this is what makes ``long_500k`` decode trivial for SSM architectures.
+
+A Pallas chunked-scan kernel (repro.kernels.ssm_scan) implements the same
+recurrence with VMEM-tiled chunks; ``ssm_scan_ref`` here is its oracle.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist_ctx import constrain_logical
+from .config import SSMSpec
+from .layers import Param, dense_param, silu
+
+PyTree = Any
+
+__all__ = ["mamba_init", "mamba_apply", "mamba_decode", "mamba_state_init",
+           "ssm_scan_ref", "ssm_assoc_scan"]
+
+
+def mamba_init(key, d_model: int, spec: SSMSpec, dtype=jnp.float32):
+    d_in = spec.expand * d_model
+    dt_rank = spec.resolved_dt_rank(d_model)
+    ks = jax.random.split(key, 6)
+    p, a = {}, {}
+    p["in_proj"], a["in_proj"] = dense_param(ks[0], d_model, (2 * d_in,), "embed", ("inner",), dtype=dtype)
+    p["conv_w"], a["conv_w"] = Param(ks[1], (spec.d_conv, d_in), (None, "inner"),
+                                     scale=1.0 / math.sqrt(spec.d_conv), dtype=dtype)
+    p["conv_b"], a["conv_b"] = Param(None, (d_in,), ("inner",), init="zeros", dtype=dtype)
+    p["x_proj"], a["x_proj"] = dense_param(ks[2], d_in, (dt_rank + 2 * spec.d_state,),
+                                           "inner", (None,), dtype=dtype)
+    p["dt_proj"], a["dt_proj"] = dense_param(ks[3], dt_rank, (d_in,), None, ("inner",), dtype=dtype)
+    # dt bias: softplus(bias) spread over [1e-3, 1e-1] (mamba-1 init)
+    u = jax.random.uniform(ks[4], (d_in,), jnp.float32)
+    dt = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    p["dt_bias"] = (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)
+    a["dt_bias"] = "inner"
+    p["A_log"] = jnp.log(jnp.broadcast_to(
+        jnp.arange(1, spec.d_state + 1, dtype=jnp.float32), (d_in, spec.d_state))).astype(dtype)
+    a["A_log"] = "inner,"
+    p["D"], a["D"] = Param(None, (d_in,), ("inner",), init="ones", dtype=dtype)
+    p["out_proj"], a["out_proj"] = dense_param(ks[5], d_in, (d_model,), "inner", ("embed",), dtype=dtype)
+    return p, a
+
+
+def _conv_causal(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 tail: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv. x (B,S,Di), w (K,Di). ``tail`` (B,K-1,Di)
+    prepends carried state (decode); else zero left-pad (train)."""
+    K = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(xp[:, k:k + x.shape[1]] * w[k] for k in range(K))
+    return out + b
+
+
+def _ssm_inputs(p, spec: SSMSpec, x: jnp.ndarray, dt_rank: int):
+    dbc = x @ p["x_proj"]
+    dt = jax.nn.softplus(dbc[..., :dt_rank] @ p["dt_proj"] + p["dt_bias"])
+    B = dbc[..., dt_rank:dt_rank + spec.d_state]
+    C = dbc[..., dt_rank + spec.d_state:]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt[..., None].astype(jnp.float32) * A)          # (B,S,Di,N)
+    dBx = (dt * x)[..., None].astype(jnp.float32) * B[..., None, :].astype(jnp.float32)
+    # the scan buffers are the SSM's memory hot spot: (B,S,d_inner,d_state)
+    # floats — pin d_inner to the model axis so the associative scan's
+    # O(log S) intermediates stay tensor-parallel.
+    dA = constrain_logical(dA, "group,,inner,")
+    dBx = constrain_logical(dBx, "group,,inner,")
+    return dA, dBx, C
+
+
+def ssm_assoc_scan(dA: jnp.ndarray, dBx: jnp.ndarray,
+                   h0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """h_t = dA_t * h_{t-1} + dBx_t along axis 1, via associative scan."""
+    if h0 is not None:
+        dBx = dBx.at[:, 0].add(dA[:, 0] * h0)
+
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    return h
+
+
+def ssm_scan_chunked_jnp(dA: jnp.ndarray, dBx: jnp.ndarray,
+                         chunk: int = 256) -> jnp.ndarray:
+    """Chunked scan: lax.scan over S/chunk chunks carrying the state, with
+    the associative scan only *within* a chunk. The O(log S) full-sequence
+    intermediates of a monolithic associative scan become O(log chunk)
+    chunk-sized ones — the memory-roofline fix for long-sequence Mamba
+    training (mirrors the Pallas ssm_scan kernel's structure)."""
+    B, S, D, N = dA.shape
+    if S % chunk or S <= chunk:
+        return ssm_assoc_scan(dA, dBx)
+    nc = S // chunk
+    dAc = dA.reshape(B, nc, chunk, D, N)
+    dBc = dBx.reshape(B, nc, chunk, D, N)
+
+    def step(h, xs):
+        a, b = xs                      # (B, chunk, D, N)
+        h_in = ssm_assoc_scan(a, b, h0=h)
+        return h_in[:, -1], h_in
+
+    h0 = jnp.zeros((B, D, N), dA.dtype)
+    _, hs = jax.lax.scan(step, h0, (jnp.moveaxis(dAc, 1, 0),
+                                    jnp.moveaxis(dBc, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1).reshape(B, S, D, N)
+
+
+def ssm_scan_ref(dA: jnp.ndarray, dBx: jnp.ndarray,
+                 h0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Sequential oracle for the scan (also the Pallas kernel's reference)."""
+    B, S = dA.shape[:2]
+    h = jnp.zeros(dA.shape[:1] + dA.shape[2:], dA.dtype) if h0 is None else h0
+
+    def step(h, t):
+        h = dA[:, t] * h + dBx[:, t]
+        return h, h
+
+    _, hs = jax.lax.scan(step, h, jnp.arange(S))
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def mamba_apply(p, spec: SSMSpec, d_model: int, x: jnp.ndarray,
+                scan_impl=None) -> jnp.ndarray:
+    """Full-sequence mixer. x (B,S,d). ``scan_impl(dA,dBx)->h`` overrides the
+    associative scan (e.g. the Pallas chunked kernel)."""
+    dt_rank = spec.resolved_dt_rank(d_model)
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = silu(_conv_causal(xi, p["conv_w"], p["conv_b"]))
+    dA, dBx, C = _ssm_inputs(p, spec, xi, dt_rank)
+    h = (scan_impl or ssm_assoc_scan)(dA, dBx)                   # (B,S,Di,N)
+    h = constrain_logical(h, "group,,inner,")
+    y = jnp.einsum("bsdn,bsn->bsd", h, C.astype(jnp.float32)).astype(x.dtype)
+    y = y + p["D"] * xi
+    y = y * silu(z)
+    return y @ p["out_proj"]
+
+
+def mamba_state_init(spec: SSMSpec, d_model: int, batch: int, dtype):
+    d_in = spec.expand * d_model
+    return {"h": jnp.zeros((batch, d_in, spec.d_state), jnp.float32),
+            "conv": jnp.zeros((batch, spec.d_conv - 1, d_in), dtype)}
+
+
+def mamba_decode(p, spec: SSMSpec, d_model: int, x1: jnp.ndarray,
+                 state: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """One-token recurrent step. x1 (B,1,d)."""
+    dt_rank = spec.resolved_dt_rank(d_model)
+    xz = x1 @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    conv_in = jnp.concatenate([state["conv"], xi], axis=1)       # (B,K,Di)
+    xi = silu(jnp.einsum("bkd,kd->bd", conv_in, p["conv_w"]) + p["conv_b"])[:, None]
+    new_conv = conv_in[:, 1:]
+    dA, dBx, C = _ssm_inputs(p, spec, xi, dt_rank)
+    h = dA[:, 0] * state["h"] + dBx[:, 0]                        # (B,Di,N)
+    y = jnp.einsum("bdn,bn->bd", h, C[:, 0].astype(jnp.float32)).astype(x1.dtype)[:, None]
+    y = y + p["D"] * xi
+    y = y * silu(z)
+    return y @ p["out_proj"], {"h": h, "conv": new_conv}

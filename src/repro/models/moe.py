@@ -1,0 +1,216 @@
+"""Top-k routed Mixture of Experts (DeepSeek-V3 [arXiv:2412.19437],
+Kimi-K2 [arXiv:2501.kimi2], Jamba [arXiv:2403.19887]).
+
+TPU-native dispatch: tokens are grouped by batch row and, within each group,
+sorted by destination expert and scattered into a fixed-capacity
+``(E, C, d)`` buffer (GShard-style capacity semantics, sort-based instead of
+one-hot-cumsum so the dispatch tensors stay O(S·k), not O(S·E·C)). The group
+axis aligns with the batch sharding, so per-group argsort/gather stay local
+to a data shard; expert weights shard over the ``experts`` logical axis
+(expert parallelism on the `model` mesh axis) and the combine scatter-add
+reduces over experts — GSPMD realizes that as the expert-parallel collective.
+
+Capacity overflow drops tokens (standard GShard semantics); the residual path
+keeps dropped tokens intact. ``dropped_frac`` is reported per layer.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from jax.sharding import PartitionSpec as P
+
+from repro.dist_ctx import constrain_logical, current_distribution
+from .config import MoESpec
+from .layers import Param, dense_param, mlp_apply, mlp_init, silu
+
+PyTree = Any
+
+__all__ = ["moe_init", "moe_apply", "moe_capacity"]
+
+
+def moe_capacity(tokens_per_group: int, spec: MoESpec) -> int:
+    c = math.ceil(tokens_per_group * spec.top_k * spec.capacity_factor / spec.n_experts)
+    return max(1, min(c, tokens_per_group))
+
+
+def moe_init(key, d: int, spec: MoESpec, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    E, f = spec.n_experts, spec.d_ff_expert
+    p, a = {}, {}
+    p["router"], a["router"] = dense_param(ks[0], d, (E,), "embed", (None,), dtype=dtype)
+    p["w_gate"], a["w_gate"] = Param(ks[1], (E, d, f), ("experts", "embed", "expert_ffn"),
+                                     scale=1.0 / math.sqrt(d), dtype=dtype)
+    p["w_in"], a["w_in"] = Param(ks[2], (E, d, f), ("experts", "embed", "expert_ffn"),
+                                 scale=1.0 / math.sqrt(d), dtype=dtype)
+    p["w_out"], a["w_out"] = Param(ks[3], (E, f, d), ("experts", "expert_ffn", "embed"),
+                                   scale=1.0 / math.sqrt(f), dtype=dtype)
+    if spec.n_shared:
+        p["shared"], a["shared"] = mlp_init(ks[4], d, f * spec.n_shared, "swiglu", dtype=dtype)
+    return p, a
+
+
+def _dispatch_one_group(x: jnp.ndarray, topi: jnp.ndarray, E: int, C: int):
+    """x (S,d); topi (S,k). Returns the slot->token table (E*C,) used to
+    GATHER tokens into expert buffers, the token->slot table (S,k) used to
+    GATHER expert outputs back (sentinel E*C == dropped), and drop stats.
+
+    Both directions are gathers (no scatter): GSPMD lowers a gather whose
+    batch/passthrough dims align with the sharding locally, whereas a
+    scatter-add with experts-sharded updates forces an all-gather of the
+    (B,E,C,d) update tensor (measured: ~100 GB/chip/layer on kimi-k2,
+    EXPERIMENTS.md §Perf K2)."""
+    S, k = topi.shape
+    eids = topi.reshape(-1)                              # (S*k,)
+    toks = jnp.repeat(jnp.arange(S), k)
+    order = jnp.argsort(eids, stable=True)
+    se, st = eids[order], toks[order]
+    counts = jnp.zeros((E,), jnp.int32).at[se].add(1)
+    start = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(S * k, dtype=jnp.int32) - start[se]
+    valid = pos < C
+    slot = jnp.where(valid, se * C + pos, E * C)         # OOB => dropped
+    table = jnp.full((E * C,), S, jnp.int32).at[slot].set(st, mode="drop")
+    # token->slot inverse: flat index (t, k_choice) -> its slot (or sentinel)
+    inv = jnp.full((S * k,), E * C, jnp.int32).at[order].set(slot)
+    dropped = jnp.sum(~valid) / (S * k)
+    return table, inv.reshape(S, k), dropped
+
+
+def _expert_ffn(wg, wi, wo, xe, out_dtype):
+    """(.., E?, C, d) tokens through per-expert SwiGLU."""
+    h = silu(jnp.einsum("becd,edf->becf", xe, wg)) \
+        * jnp.einsum("becd,edf->becf", xe, wi)
+    return jnp.einsum("becf,efd->becd", h, wo).astype(out_dtype)
+
+
+def _combine_scatter(table_flat, ye_flat, S, d):
+    """Scatter-add slot outputs back to token rows ((B, S+1, d) with the
+    sentinel row S swallowing dropped slots)."""
+    B = table_flat.shape[0]
+    return jnp.zeros((B, S + 1, d), ye_flat.dtype).at[
+        jnp.arange(B)[:, None], table_flat].add(ye_flat)
+
+
+def _expert_compute_auto(p, x_pad, table, wslot, E, C):
+    """Pure-GSPMD path (single device / no model axis)."""
+    B, S1, d = x_pad.shape
+    xe = jnp.take_along_axis(x_pad, table[..., None], axis=1)
+    xe = xe.reshape(B, E, C, d)
+    ye = _expert_ffn(p["w_gate"], p["w_in"], p["w_out"], xe, x_pad.dtype)
+    ye = ye * wslot[..., None]
+    return _combine_scatter(table, ye.reshape(B, E * C, d), S1 - 1, d)
+
+
+def _expert_compute_manual(dist, p, x_pad, table_ec, wslot, C):
+    """Manual expert parallelism (shard_map; unlisted mesh axes stay auto):
+
+      * ``model`` axis: each chip owns E/M experts; dispatch gather, expert
+        FFN, and combine scatter run locally; the only EP collective is the
+        reduction of the (B, S, d) partial combine over ``model`` (emitted
+        in the auto domain from a stacked-partials output).
+      * ``data`` axis (fsdp mode only, also manual): the batch rows are
+        manual-sharded and the FSDP ``d``-shard of the expert weights is
+        gathered EXPLICITLY with one lax.all_gather per weight — GSPMD's
+        auto choice instead all-reduced activation-sized partials
+        (~18 GB/chip/layer on kimi-k2; §Perf K4/K5).
+
+    Boundary activations travel in f32 because XLA:CPU's AllReducePromotion
+    crashes on the bf16 collectives their transposes emit; on TPU these stay
+    bf16 (documented measurement inflation, EXPERIMENTS.md §Caveats).
+    """
+    mesh = dist.mesh
+    dtype = x_pad.dtype
+    fsdp = dist.mode == "fsdp"
+    manual_axes = {"model", "data"} if fsdp else {"model"}
+    bspec = "data" if fsdp else None
+
+    def local(xp, tbl, wsl, wg, wi, wo):
+        xp = xp.astype(dtype)
+        wsl = wsl.astype(dtype)
+        if fsdp:
+            # explicit FSDP gather of the d-sharded expert weights; staged
+            # through f32 so the backward reduce-scatter is f32 (the same
+            # XLA:CPU AllReducePromotion bf16 abort as above — TPU keeps bf16)
+            wg = jax.lax.all_gather(
+                wg.astype(jnp.float32), "data", axis=1, tiled=True).astype(dtype)
+            wi = jax.lax.all_gather(
+                wi.astype(jnp.float32), "data", axis=1, tiled=True).astype(dtype)
+            wo = jax.lax.all_gather(
+                wo.astype(jnp.float32), "data", axis=2, tiled=True).astype(dtype)
+        B, S1, d = xp.shape
+        e_loc = tbl.shape[1]
+        xe = jnp.take_along_axis(
+            xp, tbl.reshape(B, e_loc * C)[..., None], axis=1)
+        xe = xe.reshape(B, e_loc, C, d)
+        ye = _expert_ffn(wg, wi, wo, xe, xp.dtype) * wsl[..., None]
+        y = _combine_scatter(tbl.reshape(B, e_loc * C),
+                             ye.reshape(B, e_loc * C, d), S1 - 1, d)
+        return y[None].astype(jnp.float32)
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(bspec, None, None), P(bspec, "model", None),
+                  P(bspec, "model", None),
+                  P("model", "data" if fsdp else None, None),
+                  P("model", "data" if fsdp else None, None),
+                  P("model", None, "data" if fsdp else None)),
+        out_specs=P("model", bspec, None, None),
+        axis_names=manual_axes, check_vma=False)
+    parts = fn(x_pad.astype(jnp.float32), table_ec,
+               wslot.astype(jnp.float32), p["w_gate"], p["w_in"], p["w_out"])
+    return parts.sum(axis=0).astype(dtype)
+
+
+def moe_apply(p, spec: MoESpec, x: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+    """x (B,S,d) -> (y (B,S,d), metrics {aux_loss, dropped_frac})."""
+    Bsz, S, d = x.shape
+    E, k = spec.n_experts, spec.top_k
+    C = moe_capacity(S, spec)
+    logits = (x @ p["router"]).astype(jnp.float32)       # (B,S,E)
+    probs = jax.nn.softmax(logits, -1)
+    topw, topi = jax.lax.top_k(probs, k)                 # (B,S,k)
+    if spec.router_scale:
+        topw = topw / (topw.sum(-1, keepdims=True) + 1e-9)
+
+    table, inv_slot, dropped = jax.vmap(
+        lambda xi, ti: _dispatch_one_group(xi, ti, E, C))(x, topi)
+
+    x_pad = jnp.concatenate([x, jnp.zeros((Bsz, 1, d), x.dtype)], axis=1)
+    # slot weights: scatter topw through inv_slot (slot -> router weight;
+    # dropped (t,k) pairs land in the sentinel column and are sliced away)
+    wslot = jnp.zeros((Bsz, E * C + 1), x.dtype).at[
+        jnp.arange(Bsz)[:, None], inv_slot.reshape(Bsz, S * k)
+    ].set(topw.reshape(Bsz, S * k).astype(x.dtype))[:, :E * C]
+    wslot = wslot.reshape(Bsz, E, C)
+
+    dist = current_distribution()
+    manual = (dist is not None and "model" in dist.axis_names
+              and E % dist.mesh.shape["model"] == 0)
+    if manual and dist.mode == "fsdp":
+        # full-manual path also shards the batch rows over `data`
+        manual = Bsz % dist.mesh.shape.get("data", 1) == 0
+    if manual:
+        y = _expert_compute_manual(dist, p, x_pad, table.reshape(Bsz, E, C),
+                                   wslot, C)[:, :S]
+    else:
+        y = _expert_compute_auto(p, x_pad, table, wslot, E, C)[:, :S]
+    # name the combined output so the remat policy can SAVE it: replaying
+    # the expert-parallel collective during the backward recompute is pure
+    # wasted wire (see EXPERIMENTS.md §Perf, jamba iteration J5)
+    y = checkpoint_name(y, "moe_combine")
+
+    if spec.n_shared:
+        y = y + mlp_apply(p["shared"], x, "swiglu")
+
+    # Switch-style load-balance loss: E * sum_e f_e * P_e
+    f_e = jnp.zeros((Bsz, E), jnp.float32).at[
+        jnp.arange(Bsz)[:, None, None], topi].add(1.0) / (S * k)
+    P_e = probs.mean(axis=1)                                     # (B,E)
+    aux = E * jnp.sum(f_e * P_e, axis=-1).mean()
+    return y, {"moe_aux": aux * spec.aux_coef,
+               "moe_dropped_frac": dropped.mean()}

@@ -1,0 +1,36 @@
+"""Rotary position embeddings, including partial rotary (stablelm-2: 25%)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["rope_frequencies", "apply_rope"]
+
+
+def rope_frequencies(rot_dim: int, positions: jnp.ndarray,
+                     theta: float = 10000.0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables (..., rot_dim/2) for integer positions (...,)."""
+    assert rot_dim % 2 == 0
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., rot_dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray,
+               rot_dim: int | None = None) -> jnp.ndarray:
+    """Rotate the first ``rot_dim`` features of x (..., S, H, head_dim);
+    cos/sin are (..., S, rot_dim/2) and broadcast over the head axis."""
+    hd = x.shape[-1]
+    if rot_dim is None:
+        rot_dim = hd
+    if rot_dim == 0:
+        return x
+    xr, xp = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    c = cos[..., None, :]  # broadcast over heads
+    s = sin[..., None, :]
+    y1 = x1 * c - x2 * s
+    y2 = x1 * s + x2 * c
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr, xp], axis=-1) if rot_dim < hd else yr

@@ -1,0 +1,198 @@
+"""Top-level models: decoder-only LM, enc-dec (whisper), VLM injection
+(llava), MTP head (DeepSeek-V3). Pure functional: ``init`` returns
+``(params, axes)`` twin trees; ``apply``/``decode``/``prefill`` are jittable.
+
+Modality frontends are STUBS per the assignment: the audio conv/mel frontend
+and the VLM vision tower are *not* implemented — inputs arrive as precomputed
+frame/patch embeddings of shape (B, n_frames|n_image_tokens, d_model).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks as B
+from .attention import _project_qkv
+from .config import ModelConfig
+from .layers import Param, dtype_of, embed_init, norm_apply, norm_init
+
+PyTree = Any
+
+__all__ = ["lm_init", "lm_apply", "lm_decode", "lm_cache_init", "lm_prefill",
+           "encode_audio"]
+
+
+# ===================================================================== init
+def lm_init(key, cfg: ModelConfig):
+    dtype = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    p: Dict = {}
+    a: Dict = {}
+    p["embed"], a["embed"] = embed_init(ks[0], cfg.vocab, cfg.d_model, dtype)
+    p["layers"], a["layers"], _ = B.stack_init(ks[1], cfg, cfg.blocks, dtype)
+    p["final_norm"], a["final_norm"] = norm_init(cfg.norm, cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"], a["lm_head"] = Param(
+            ks[2], (cfg.d_model, cfg.vocab), ("embed", "vocab"),
+            scale=cfg.d_model ** -0.5, dtype=dtype)
+    if cfg.encoder is not None:
+        enc_blocks = tuple(
+            B.BlockSpec(kind="attn", attn=cfg.encoder.attn, d_ff=cfg.encoder.d_ff,
+                        mlp_act="gelu")
+            for _ in range(cfg.encoder.n_layers))
+        ep, ea, _ = B.stack_init(ks[3], cfg, enc_blocks, dtype)
+        p["encoder"] = {"layers": ep}
+        a["encoder"] = {"layers": ea}
+        p["encoder"]["norm"], a["encoder"]["norm"] = norm_init(cfg.norm, cfg.d_model, dtype)
+        p["encoder"]["pos"], a["encoder"]["pos"] = Param(
+            ks[4], (cfg.encoder.n_frames, cfg.d_model), (None, "embed"),
+            scale=0.02, dtype=dtype)
+    if cfg.mtp:
+        mtp_spec = cfg.blocks[-1]
+        mp, ma = B.block_init(ks[5], cfg, mtp_spec, dtype)
+        p["mtp"] = {"block": mp}
+        a["mtp"] = {"block": ma}
+        p["mtp"]["proj"], a["mtp"]["proj"] = Param(
+            ks[6], (2 * cfg.d_model, cfg.d_model), ("embed", "embed_out"),
+            scale=(2 * cfg.d_model) ** -0.5, dtype=dtype)
+        p["mtp"]["norm_h"], a["mtp"]["norm_h"] = norm_init(cfg.norm, cfg.d_model, dtype)
+        p["mtp"]["norm_e"], a["mtp"]["norm_e"] = norm_init(cfg.norm, cfg.d_model, dtype)
+    return p, a
+
+
+def _enc_segs(cfg: ModelConfig):
+    enc_blocks = tuple(
+        B.BlockSpec(kind="attn", attn=cfg.encoder.attn, d_ff=cfg.encoder.d_ff,
+                    mlp_act="gelu")
+        for _ in range(cfg.encoder.n_layers))
+    return B.segments_of(enc_blocks)
+
+
+def _unembed(p, cfg: ModelConfig, h: jnp.ndarray) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return h @ p["embed"].T
+    return h @ p["lm_head"]
+
+
+def _embed_lookup(p, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Token embedding gather. The table is staged through f32: with a
+    vocab-sharded table the SPMD gather emits an all-reduce of the output,
+    and XLA:CPU's AllReducePromotion pass aborts on bf16 all-reduce (backend
+    bug, see moe.py); on TPU the f32 staging is fused away for replicated
+    tables and costs one convert for sharded ones."""
+    emb = p["embed"]
+    return emb.astype(jnp.float32)[tokens].astype(emb.dtype)
+
+
+# ===================================================================== train
+def encode_audio(p, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """Whisper-style encoder over (stub) precomputed frame embeddings."""
+    frames = frames.astype(dtype_of(cfg.compute_dtype))
+    h = frames + p["encoder"]["pos"][None, : frames.shape[1]]
+    h, _ = B.stack_apply(p["encoder"]["layers"], cfg, _enc_segs(cfg), h)
+    return norm_apply(cfg.norm, p["encoder"]["norm"], h)
+
+
+def lm_apply(p, cfg: ModelConfig, tokens: jnp.ndarray,
+             image_embeds: Optional[jnp.ndarray] = None,
+             audio_frames: Optional[jnp.ndarray] = None,
+             ssm_scan_impl=None, remat: bool = False,
+             remat_policy=None) -> Tuple[jnp.ndarray, Dict]:
+    """Returns (logits over the *text* positions, aux dict). For VLM, image
+    embeddings are prepended; logits for image positions are dropped. For
+    enc-dec, ``audio_frames`` feeds the encoder and cross-attention."""
+    segs = B.segments_of(cfg.blocks)
+    h = _embed_lookup(p, tokens)
+    n_img = 0
+    if cfg.vision is not None:
+        assert image_embeds is not None
+        n_img = image_embeds.shape[1]
+        h = jnp.concatenate([image_embeds.astype(h.dtype), h], axis=1)
+    memory = None
+    if cfg.encoder is not None:
+        assert audio_frames is not None
+        memory = encode_audio(p, cfg, audio_frames)
+    h, aux = B.stack_apply(p["layers"], cfg, segs, h, memory=memory,
+                           ssm_scan_impl=ssm_scan_impl, remat=remat,
+                           remat_policy=remat_policy)
+    h = norm_apply(cfg.norm, p["final_norm"], h)
+    if n_img:
+        h = h[:, n_img:]
+    logits = _unembed(p, cfg, h)
+    if cfg.mtp:
+        # predict token t+2 at position t from (h_t, embed(tok_{t+1}))
+        ht = norm_apply(cfg.norm, p["mtp"]["norm_h"], h[:, :-1])
+        et = norm_apply(cfg.norm, p["mtp"]["norm_e"], _embed_lookup(p, tokens[:, 1:]))
+        hm = jnp.concatenate([ht, et], axis=-1) @ p["mtp"]["proj"]
+        hm, _ = B.block_apply(p["mtp"]["block"], cfg, cfg.blocks[-1], hm)
+        aux = dict(aux)
+        aux["mtp_logits"] = _unembed(p, cfg, hm)
+    return logits, aux
+
+
+# ===================================================================== serve
+def lm_cache_init(cfg: ModelConfig, batch: int, seq_len: int,
+                  dtype=None) -> PyTree:
+    dtype = dtype or dtype_of(cfg.param_dtype)
+    segs = B.segments_of(cfg.blocks)
+    n_frames = cfg.encoder.n_frames if cfg.encoder is not None else 0
+    return B.stack_cache_init(cfg, segs, batch, seq_len, dtype, n_frames)
+
+
+def lm_decode(p, cfg: ModelConfig, token: jnp.ndarray, caches: PyTree,
+              pos) -> Tuple[jnp.ndarray, PyTree]:
+    """One decode step: token (B,) int32, pos scalar -> (logits (B,V), caches).
+
+    Enc-dec cross k/v live inside the cache (filled by prefill), so decode
+    never re-runs the encoder."""
+    segs = B.segments_of(cfg.blocks)
+    h = _embed_lookup(p, token)[:, None]                        # (B,1,d)
+    h, caches = B.stack_decode(p["layers"], cfg, segs, h, caches, pos)
+    h = norm_apply(cfg.norm, p["final_norm"], h)
+    return _unembed(p, cfg, h)[:, 0], caches
+
+
+def lm_prefill(p, cfg: ModelConfig, tokens: jnp.ndarray, caches: PyTree,
+               image_embeds: Optional[jnp.ndarray] = None,
+               audio_frames: Optional[jnp.ndarray] = None
+               ) -> Tuple[jnp.ndarray, PyTree]:
+    """Process a full prompt, filling decode caches; returns (last-position
+    logits, caches). For enc-dec, also computes and caches cross k/v."""
+    segs = B.segments_of(cfg.blocks)
+    h = _embed_lookup(p, tokens)
+    if cfg.vision is not None and image_embeds is not None:
+        h = jnp.concatenate([image_embeds.astype(h.dtype), h], axis=1)
+    if cfg.encoder is not None:
+        assert audio_frames is not None
+        memory = encode_audio(p, cfg, audio_frames)
+        caches = _fill_cross_kv(p, cfg, segs, caches, memory)
+    h, caches = B.stack_prefill(p["layers"], cfg, segs, h, caches)
+    h = norm_apply(cfg.norm, p["final_norm"], h)
+    return _unembed(p, cfg, h[:, -1]), caches
+
+
+def _fill_cross_kv(p, cfg: ModelConfig, segs, caches, memory: jnp.ndarray):
+    """Compute encoder k/v once for every cross-attention layer."""
+    new = []
+    for (pattern, R), seg_p, seg_c in zip(segs, p["layers"], caches):
+        seg_new = []
+        for spec, bp, bc in zip(pattern, seg_p, seg_c):
+            if spec.cross_attn is None:
+                seg_new.append(bc)
+                continue
+            ca = spec.cross_attn
+
+            def kv_of(w):
+                k = jnp.einsum("btd,dhk->bthk", memory, w["wk"])
+                v = jnp.einsum("btd,dhk->bthk", memory, w["wv"])
+                return k, v
+
+            ks, vs = jax.vmap(lambda w: kv_of(w))(bp["cross"])
+            bc = dict(bc)
+            bc["mem_k"] = ks.astype(bc["mem_k"].dtype)
+            bc["mem_v"] = vs.astype(bc["mem_v"].dtype)
+            seg_new.append(bc)
+        new.append(seg_new)
+    return new

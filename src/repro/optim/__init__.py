@@ -1,0 +1,2 @@
+from .optimizers import Optimizer, adamw, lars, sgd
+from .schedules import (constant, cosine_warmup, scale_lr_sqrt_p, step_decay)

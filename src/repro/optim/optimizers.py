@@ -1,0 +1,124 @@
+"""Optimizers (pure pytree transforms; states mirror param layout, so they
+inherit the replica axis + sharding of the parameters they track).
+
+The paper trains with SGD + momentum (Caffe defaults); AdamW is provided for
+the LLM-family configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .schedules import Schedule, constant
+
+PyTree = Any
+
+__all__ = ["Optimizer", "sgd", "adamw", "lars"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree]]
+
+
+def sgd(schedule: Schedule | float, momentum: float = 0.9,
+        weight_decay: float = 0.0) -> Optimizer:
+    """SGD + momentum — the paper's optimizer (Caffe default momentum 0.9)."""
+    sched = constant(schedule) if isinstance(schedule, (int, float)) else schedule
+
+    def init(params):
+        mom = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return {"step": jnp.zeros((), jnp.int32), "mom": mom}
+
+    def update(params, grads, state):
+        lr = sched(state["step"])
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p.astype(g.dtype),
+                                 grads, params)
+        if momentum:
+            mom = jax.tree.map(lambda m, g: momentum * m + g.astype(m.dtype),
+                               state["mom"], grads)
+            params = jax.tree.map(
+                lambda p, m: (p - lr * m.astype(jnp.float32)).astype(p.dtype),
+                params, mom)
+            return params, {"step": state["step"] + 1, "mom": mom}
+        params = jax.tree.map(
+            lambda p, g: (p - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return params, {"step": state["step"] + 1, "mom": None}
+
+    return Optimizer(init, update)
+
+
+def lars(schedule: Schedule | float, momentum: float = 0.9,
+         trust_coef: float = 1e-3, weight_decay: float = 0.0,
+         eps: float = 1e-9) -> Optimizer:
+    """Layer-wise Adaptive Rate Scaling [You et al., the paper's §8 pointer
+    for large-batch hyperparameter scaling]: per-leaf LR is scaled by
+    trust_coef * ||w|| / (||g|| + wd*||w||)."""
+    sched = constant(schedule) if isinstance(schedule, (int, float)) else schedule
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "mom": jax.tree.map(lambda p_: jnp.zeros_like(p_, jnp.float32),
+                                    params)}
+
+    def update(params, grads, state):
+        lr = sched(state["step"])
+
+        def upd(p, g, m):
+            pf = p.astype(jnp.float32)
+            gf = g.astype(jnp.float32)
+            if weight_decay:
+                gf = gf + weight_decay * pf
+            wn = jnp.linalg.norm(pf.reshape(-1))
+            gn = jnp.linalg.norm(gf.reshape(-1))
+            trust = jnp.where(
+                (wn > 0) & (gn > 0),
+                trust_coef * wn / (gn + weight_decay * wn + eps), 1.0)
+            m = momentum * m + gf * trust
+            return (pf - lr * m).astype(p.dtype), m
+
+        out = jax.tree.map(upd, params, grads, state["mom"])
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_mom = jax.tree.map(lambda o: o[1], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"step": state["step"] + 1, "mom": new_mom}
+
+    return Optimizer(init, update)
+
+
+def adamw(schedule: Schedule | float, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    sched = constant(schedule) if isinstance(schedule, (int, float)) else schedule
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(params, grads, state):
+        step = state["step"] + 1
+        lr = sched(state["step"])
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            u = (m_ / c1) / (jnp.sqrt(v_ / c2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        params = jax.tree.map(upd, params, m, v)
+        return params, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)

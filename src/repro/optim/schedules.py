@@ -1,0 +1,45 @@
+"""Learning-rate schedules.
+
+Includes the two rules the paper's baseline setup (§7.1) uses:
+* ``step_decay`` — ResNet-50's regimen: multiply by 0.1 every N steps/epochs;
+* ``scale_lr_sqrt_p`` — Krizhevsky's weak-scaling rule (LR x sqrt(p)),
+  applied to the AGD baseline only; GossipGraD keeps the single-device LR.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+__all__ = ["constant", "step_decay", "cosine_warmup", "scale_lr_sqrt_p"]
+
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def step_decay(lr: float, decay: float = 0.1, every: int = 30) -> Schedule:
+    """lr * decay^(step // every) — the paper's ResNet-50 step regimen."""
+    def fn(step):
+        return jnp.asarray(lr, jnp.float32) * decay ** (step // every)
+    return fn
+
+
+def cosine_warmup(lr: float, warmup: int, total: int,
+                  final_frac: float = 0.1) -> Schedule:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac * lr + (1 - final_frac) * lr * 0.5 * (1 + jnp.cos(math.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def scale_lr_sqrt_p(schedule: Schedule, p: int) -> Schedule:
+    """Krizhevsky weak-scaling rule for the AGD baseline (paper §7.1/A.4)."""
+    s = math.sqrt(max(p, 1))
+    return lambda step: schedule(step) * s

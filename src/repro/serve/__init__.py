@@ -1,0 +1,2 @@
+from .engine import ServingEngine
+from .step import ServeBundle, cache_axes, make_decode_step, make_prefill_step

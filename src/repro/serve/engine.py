@@ -1,0 +1,65 @@
+"""Minimal batched serving engine (single-host; the examples' driver).
+
+Greedy decoding over a fixed request batch: one jitted prefill, then jitted
+single-token decode steps — the same ``lm_prefill``/``lm_decode`` functions
+the multi-pod serve_step lowers, so what the engine runs is what the dry-run
+proves distributable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm_cache_init, lm_decode, lm_prefill
+from repro.models.config import ModelConfig
+
+__all__ = ["ServingEngine"]
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, max_seq: int):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+
+        def _prefill(params, tokens, caches, image_embeds=None,
+                     audio_frames=None):
+            return lm_prefill(params, cfg, tokens, caches,
+                              image_embeds=image_embeds,
+                              audio_frames=audio_frames)
+
+        def _decode(params, token, caches, pos):
+            return lm_decode(params, cfg, token, caches, pos)
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode)
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int,
+                 image_embeds: Optional[np.ndarray] = None,
+                 audio_frames: Optional[np.ndarray] = None) -> np.ndarray:
+        """prompts (B, S_prompt) int32 -> (B, max_new_tokens) greedy tokens."""
+        B, S = prompts.shape
+        n_img = self.cfg.vision.n_image_tokens if (
+            self.cfg.vision is not None and image_embeds is not None) else 0
+        assert S + n_img + max_new_tokens <= self.max_seq, "cache too small"
+        cache = lm_cache_init(self.cfg, B, self.max_seq)
+        kw = {}
+        if image_embeds is not None:
+            kw["image_embeds"] = jnp.asarray(image_embeds)
+        if audio_frames is not None:
+            kw["audio_frames"] = jnp.asarray(audio_frames)
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts),
+                                      cache, **kw)
+        out = []
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        pos = S + n_img
+        for t in range(max_new_tokens):
+            out.append(np.asarray(tok))
+            logits, cache = self._decode(self.params, tok, cache,
+                                         jnp.int32(pos + t))
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return np.stack(out, axis=1)

@@ -1,0 +1,136 @@
+"""Serving steps: batched prefill and single-token decode.
+
+Decode shapes in the assignment (``decode_32k``, ``long_500k``) lower exactly
+this ``serve_step``: ONE new token against a ``seq_len`` KV cache. Parameters
+are a single logical copy (no replica axis): tensor-parallel over ``model``,
+plus FSDP over ``data`` for the >=52B archs. KV caches shard batch over the
+data axes; when the batch itself cannot shard (long_500k's batch=1) the cache
+*sequence* dim shards over ``data`` instead (sequence-parallel decode).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist_ctx import use_distribution
+from repro.models import (lm_cache_init, lm_decode, lm_init, lm_prefill,
+                          segments_of)
+from repro.models.config import BlockSpec, ModelConfig
+from repro.train.sharding import Distribution
+
+PyTree = Any
+
+__all__ = ["cache_axes", "make_decode_step", "make_prefill_step",
+           "ServeBundle"]
+
+
+def _block_cache_axes(cfg: ModelConfig, spec: BlockSpec) -> Dict:
+    a: Dict = {}
+    if spec.kind == "attn":
+        a["kv"] = {"k": ",batch,kv_seq,kv_heads,",
+                   "v": ",batch,kv_seq,kv_heads,"}
+    elif spec.kind == "mla":
+        a["kv"] = {"c_kv": ",batch,kv_seq,",
+                   "k_rope": ",batch,kv_seq,"}
+    else:
+        a["ssm"] = {"h": ",batch,inner,", "conv": ",batch,,inner"}
+    if spec.cross_attn is not None:
+        a["mem_k"] = ",batch,,kv_heads,"
+        a["mem_v"] = ",batch,,kv_heads,"
+    return a
+
+
+def cache_axes(cfg: ModelConfig) -> PyTree:
+    """Axes tree mirroring lm_cache_init (list/seg structure, leading repeat
+    axis unannotated)."""
+    segs = segments_of(cfg.blocks)
+    return [[_block_cache_axes(cfg, spec) for spec in pattern]
+            for pattern, _ in segs]
+
+
+class ServeBundle:
+    def __init__(self, *, step_fn, param_specs, cache_specs, in_specs, dist,
+                 cfg):
+        self.step_fn = step_fn
+        self.param_specs = param_specs
+        self.cache_specs = cache_specs
+        self.in_specs = in_specs
+        self.dist = dist
+        self.cfg = cfg
+
+    def jitted(self, donate_cache: bool = True):
+        shard = lambda t: jax.tree.map(self.dist.sharding, t)
+        return jax.jit(
+            self.step_fn,
+            in_shardings=(shard(self.param_specs), shard(self.cache_specs),
+                          *[shard(s) for s in self.in_specs]),
+            out_shardings=(None, shard(self.cache_specs)),
+            donate_argnums=(1,) if donate_cache else ())
+
+
+def _param_and_cache_specs(cfg: ModelConfig, dist: Distribution,
+                           param_shapes: PyTree, param_axes: PyTree,
+                           cache_shapes: PyTree):
+    param_specs = dist.param_specs(param_shapes, param_axes, replica_axis=False)
+    c_axes = cache_axes(cfg)
+
+    def one(shape_leaf, ann):
+        return dist.leaf_spec(shape_leaf.shape, ann, False)
+
+    cache_specs = jax.tree.map(one, cache_shapes, c_axes)
+    return param_specs, cache_specs
+
+
+def make_decode_step(cfg: ModelConfig, dist: Distribution, *,
+                     param_shapes: PyTree, param_axes: PyTree,
+                     cache_shapes: PyTree) -> ServeBundle:
+    """step(params, cache, token (B,), pos ()) -> (logits (B,V), cache)."""
+    param_specs, cache_specs = _param_and_cache_specs(
+        cfg, dist, param_shapes, param_axes, cache_shapes)
+
+    def step(params, cache, token, pos):
+        with use_distribution(dist):
+            logits, cache = lm_decode(params, cfg, token, cache, pos)
+            return logits, cache
+
+    batch = jax.tree.leaves(cache_shapes)[0].shape[1]
+    tok_spec = dist.leaf_spec((batch,), "batch", False)
+    return ServeBundle(step_fn=step, param_specs=param_specs,
+                       cache_specs=cache_specs, in_specs=(tok_spec, P()),
+                       dist=dist, cfg=cfg)
+
+
+def make_prefill_step(cfg: ModelConfig, dist: Distribution, *,
+                      param_shapes: PyTree, param_axes: PyTree,
+                      cache_shapes: PyTree,
+                      with_image: bool = False,
+                      with_audio: bool = False) -> ServeBundle:
+    """step(params, cache, tokens (B,S) [, image_embeds][, audio_frames])
+    -> (last-position logits, filled cache)."""
+    param_specs, cache_specs = _param_and_cache_specs(
+        cfg, dist, param_shapes, param_axes, cache_shapes)
+
+    def step(params, cache, tokens, *extra):
+        with use_distribution(dist):
+            kw = {}
+            i = 0
+            if with_image:
+                kw["image_embeds"] = extra[i]; i += 1
+            if with_audio:
+                kw["audio_frames"] = extra[i]; i += 1
+            logits, cache = lm_prefill(params, cfg, tokens, cache, **kw)
+            return logits, cache
+
+    batch = jax.tree.leaves(cache_shapes)[0].shape[1]
+    in_specs = [dist.leaf_spec((batch, 1), "batch,", False)]
+    if with_image:
+        in_specs.append(dist.leaf_spec((batch, 1, 1), "batch,,", False))
+    if with_audio:
+        in_specs.append(dist.leaf_spec((batch, 1, 1), "batch,,", False))
+    return ServeBundle(step_fn=step, param_specs=param_specs,
+                       cache_specs=cache_specs, in_specs=tuple(in_specs),
+                       dist=dist, cfg=cfg)

@@ -1,0 +1,5 @@
+from .loss import cross_entropy, make_loss_fn
+from .sharding import Distribution, make_distribution
+from .step import (TrainStepBundle, init_train_state, make_train_step_bundle,
+                   state_specs_of)
+from .trainer import Trainer

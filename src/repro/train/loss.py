@@ -1,0 +1,55 @@
+"""Losses: next-token cross entropy + MoE load-balance aux + MTP term."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm_apply
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+__all__ = ["cross_entropy", "make_loss_fn"]
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean token CE. logits (..., V) any float dtype; labels (...) int."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def make_loss_fn(cfg: ModelConfig, ssm_scan_impl=None, remat: bool = False,
+                 remat_policy=None):
+    """loss_fn(params, batch) -> (scalar, metrics) for ONE replica.
+
+    batch: {"tokens": (b, S)} plus optional "image_embeds" (b, Ni, d) /
+    "audio_frames" (b, F, d) stubs. Loss = CE(next-token) + MoE aux (+ MTP).
+    """
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        logits, aux = lm_apply(
+            params, cfg, tokens[:, :-1],
+            image_embeds=batch.get("image_embeds"),
+            audio_frames=batch.get("audio_frames"),
+            ssm_scan_impl=ssm_scan_impl, remat=remat,
+            remat_policy=remat_policy)
+        ce = cross_entropy(logits, tokens[:, 1:])
+        loss = ce + aux["moe_aux"]
+        metrics = {"ce": ce, "moe_aux": aux["moe_aux"],
+                   "moe_dropped_frac": aux["moe_dropped_frac"]}
+        if cfg.mtp:
+            # logits at position t (over tokens[:-1]) predict tokens[t+1];
+            # MTP logits at t predict tokens[t+2].
+            mtp_logits = aux["mtp_logits"]          # (b, S-2, V) over t<=S-3
+            mtp_ce = cross_entropy(mtp_logits, tokens[:, 2:])
+            loss = loss + cfg.mtp_coef * mtp_ce
+            metrics["mtp_ce"] = mtp_ce
+        metrics["loss"] = loss
+        return loss, metrics
+
+    return loss_fn

@@ -1,0 +1,162 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Model code annotates every parameter dim with a *logical* axis name
+(layers.ax). This module maps those names onto the production mesh per
+distribution mode:
+
+* ``replica`` (paper's pure data parallelism): each data-parallel rank holds
+  a DISTINCT full model replica, tensor-parallel over the ``model`` axis.
+  Parameters gain a leading replica axis of size dp sharded over the data
+  axes. Gossip replicas == data ranks.
+* ``fsdp`` (hierarchical, for the >=52B archs): ONE logical copy, sharded
+  over ``model`` (TP/EP) AND ``data`` (FSDP on the ``embed`` logical axis);
+  gossip replicas live on the ``pod`` axis only (2 replicas multi-pod,
+  degenerating to plain FSDP+TP on a single pod — DESIGN.md §2).
+
+Any dim whose size does not divide its mesh axis is replicated (e.g. 8 KV
+heads on a 16-way model axis); a tensor never uses the same mesh axis twice.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.layers import ax_names
+
+PyTree = Any
+
+__all__ = ["Distribution", "make_distribution", "build_param_specs",
+           "leaf_spec"]
+
+_RULES = {
+    "replica": {
+        "vocab": "model", "heads": "model", "kv_heads": "model",
+        "ffn": "model", "experts": "model", "inner": "model",
+        "embed": None, "head_dim": None, "latent": None,
+        "expert_ffn": None, "embed_out": None,
+        # cache axes: batch over the data axes; kv_seq falls back to "data"
+        # when the batch can't shard (e.g. long_500k's batch=1) — sequence-
+        # parallel decode cache.
+        "batch": "__batch__", "kv_seq": "data", "group": None,
+    },
+    "fsdp": {
+        "vocab": "model", "heads": "model", "kv_heads": "model",
+        "ffn": "model", "experts": "model", "inner": "model",
+        "embed": "data", "head_dim": None, "latent": None,
+        "expert_ffn": None, "embed_out": "data",
+        "batch": "__batch__", "kv_seq": "data", "group": "data",
+    },
+    # paper-exact deployment for models that fit on one chip: every chip is
+    # a full replica (no tensor parallelism) and the gossip/all-reduce domain
+    # is the WHOLE mesh — the regime of GossipGraD's own experiments.
+    "pure_dp": {
+        "vocab": None, "heads": None, "kv_heads": None,
+        "ffn": None, "experts": None, "inner": None,
+        "embed": None, "head_dim": None, "latent": None,
+        "expert_ffn": None, "embed_out": None,
+        "batch": "__batch__", "kv_seq": None, "group": None,
+    },
+}
+
+
+class Distribution:
+    """Resolved distribution plan for (config.dist_mode, mesh)."""
+
+    def __init__(self, mesh: Mesh, mode: str):
+        if mode not in _RULES:
+            raise ValueError(f"unknown dist mode {mode!r}")
+        self.mesh = mesh
+        self.mode = mode
+        self.axis_names = tuple(mesh.axis_names)
+        self.multi_pod = "pod" in self.axis_names
+        # batch is always sharded over pod+data jointly (pure_dp: all axes)
+        self.batch_axes: Tuple[str, ...] = tuple(
+            a for a in ("pod", "data") if a in self.axis_names)
+        if mode == "pure_dp":
+            self.batch_axes = self.batch_axes + ("model",)
+        # gossip replica axes
+        if mode in ("replica", "pure_dp"):
+            self.dp_axes = self.batch_axes
+        else:
+            self.dp_axes = ("pod",) if self.multi_pod else ()
+        self.dp = int(np.prod([mesh.shape[a] for a in self.dp_axes])) if self.dp_axes else 1
+
+    # -------------------------------------------------- parameter specs
+    def leaf_spec(self, shape: Tuple[int, ...], annotation: str,
+                  replica_axis: bool) -> P:
+        names = ax_names(annotation)
+        assert len(names) == len(shape), (annotation, shape)
+        rules = _RULES[self.mode]
+        used = set(self.dp_axes) if replica_axis else set()
+        dims: list = []
+        for size, name in zip(shape, names):
+            mesh_axis = rules.get(name) if name else None
+            if mesh_axis == "__batch__":
+                axes = tuple(a for a in self.batch_axes if a not in used)
+                prod = int(np.prod([self.mesh.shape[a] for a in axes])) if axes else 0
+                if axes and prod and size % prod == 0:
+                    dims.append(axes if len(axes) > 1 else axes[0])
+                    used.update(axes)
+                else:
+                    dims.append(None)
+                continue
+            if (mesh_axis is None or mesh_axis not in self.axis_names
+                    or mesh_axis in used
+                    or size % self.mesh.shape[mesh_axis] != 0):
+                dims.append(None)
+            else:
+                dims.append(mesh_axis)
+                used.add(mesh_axis)
+        if replica_axis:
+            front = self.dp_axes if len(self.dp_axes) != 1 else self.dp_axes[0]
+            return P(front, *dims) if self.dp_axes else P(None, *dims)
+        return P(*dims)
+
+    def param_specs(self, params: PyTree, axes: PyTree,
+                    replica_axis: bool = False) -> PyTree:
+        """PartitionSpec tree for params (leaves must already include the
+        leading replica axis if ``replica_axis``; annotations then start with
+        an empty segment which maps onto the dp axes)."""
+        def one(p, a):
+            if replica_axis:
+                # annotation's leading empty segment stands for the dp axes
+                assert a.startswith(","), a
+                return self.leaf_spec(p.shape[1:], a[1:], True)
+            return self.leaf_spec(p.shape, a, False)
+
+        return jax.tree.map(one, params, axes)
+
+    # -------------------------------------------------- data specs
+    def batch_spec(self, ndim: int) -> P:
+        front = (self.batch_axes if len(self.batch_axes) != 1
+                 else self.batch_axes[0])
+        return P(front, *([None] * (ndim - 1)))
+
+    def replica_batch_spec(self, ndim: int) -> P:
+        """Spec for batches reshaped to (dp, local_b, ...)."""
+        if not self.dp_axes:
+            return P(None, *self.batch_spec(ndim - 1))
+        front = self.dp_axes if len(self.dp_axes) != 1 else self.dp_axes[0]
+        inner: Tuple = tuple(a for a in self.batch_axes if a not in self.dp_axes)
+        second = (inner if len(inner) > 1 else (inner[0] if inner else None))
+        return P(front, second, *([None] * (ndim - 2)))
+
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+def make_distribution(mesh: Mesh, mode: str) -> Distribution:
+    return Distribution(mesh, mode)
+
+
+def build_param_specs(dist: Distribution, params: PyTree, axes: PyTree,
+                      replica_axis: bool = False) -> PyTree:
+    return dist.param_specs(params, axes, replica_axis)
+
+
+def leaf_spec(dist: Distribution, shape, annotation: str,
+              replica_axis: bool = False) -> P:
+    return dist.leaf_spec(tuple(shape), annotation, replica_axis)

@@ -1,0 +1,163 @@
+"""Protocol-neutral distributed train step.
+
+Replica representation: every param / optimizer-state leaf carries a leading
+replica axis of size ``dist.dp`` sharded over the gossip axes; the batch is
+``(dp, local_b, ...)`` replica-major. The per-replica gradient is a vmap over
+that axis — so *no* cross-replica reduction exists unless the protocol
+inserts one (AGD's mean == all-reduce; GossipGraD's mix == collective-permute;
+none == ensemble). This reproduces the paper's semantics exactly: each rank
+owns a distinct model, communication is whatever the protocol says.
+
+Step layout (mirrors GossipGraD Fig. 8/9):
+    1. per-replica grads from the LOCAL batch shard          (compute)
+    2. protocol.comm_grads      — AGD's all-reduce           (comm, overlapped)
+    3. local optimizer update                                 (compute)
+    4. protocol.comm_params     — gossip ppermute + average  (comm, overlapped)
+    5. ring-rotate the *next* batch shards (§4.5.2 shuffle)  (comm, overlapped)
+
+``phase`` (the gossip schedule position) is STATIC by default: the launcher
+keeps ``schedule.period`` compiled variants — see core/gossip.py for the
+rationale and the dynamic lax.switch alternative.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import make_protocol, make_ring_shuffle
+from repro.dist_ctx import use_distribution
+from repro.models import lm_init
+from repro.models.config import ModelConfig
+from repro.optim import Optimizer
+from .loss import make_loss_fn
+from .sharding import Distribution
+
+PyTree = Any
+
+__all__ = ["TrainStepBundle", "make_train_step_bundle", "init_train_state"]
+
+
+class TrainStepBundle:
+    def __init__(self, *, step_fn, state_specs, batch_specs, protocol, dist,
+                 cfg, optimizer):
+        self.step_fn = step_fn          # (state, batch, *, phase:int static)
+        self.state_specs = state_specs
+        self.batch_specs = batch_specs
+        self.protocol = protocol
+        self.dist = dist
+        self.cfg = cfg
+        self.optimizer = optimizer
+
+    def jitted(self, phase: int, donate: bool = True):
+        fn = functools.partial(self.step_fn, phase=phase)
+        shard = lambda tree: jax.tree.map(self.dist.sharding, tree)
+        return jax.jit(
+            fn,
+            in_shardings=(shard(self.state_specs), shard(self.batch_specs)),
+            out_shardings=(shard(self.state_specs), shard(self.batch_specs),
+                           None),
+            donate_argnums=(0, 1) if donate else ())
+
+
+def _replicate_tree(tree: PyTree, dp: int) -> PyTree:
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (dp,) + x.shape), tree)
+
+
+def init_train_state(key, cfg: ModelConfig, dist: Distribution,
+                     optimizer: Optimizer):
+    """(state, state_axes): state = {"params","opt"}, leaves carry a leading
+    replica axis of size dist.dp (1 in single-pod fsdp mode)."""
+    params, axes = lm_init(key, cfg)
+    params = _replicate_tree(params, max(dist.dp, 1))
+    axes = jax.tree.map(lambda s: "," + s, axes)
+    opt_state = optimizer.init(params)
+    return {"params": params, "opt": opt_state}, axes
+
+
+def state_specs_of(dist: Distribution, state_shapes: PyTree,
+                   state_axes: PyTree) -> PyTree:
+    param_specs = dist.param_specs(state_shapes["params"], state_axes,
+                                   replica_axis=True)
+    opt_specs = {}
+    for k, v in state_shapes["opt"].items():
+        if k == "step":
+            opt_specs[k] = P()
+        elif v is None:
+            opt_specs[k] = None
+        else:
+            opt_specs[k] = param_specs
+    return {"params": param_specs, "opt": opt_specs}
+
+
+def make_train_step_bundle(
+    cfg: ModelConfig,
+    dist: Distribution,
+    optimizer: Optimizer,
+    *,
+    state_shapes: PyTree,
+    state_axes: PyTree,
+    batch_shapes: PyTree,
+    protocol: str = "gossip",
+    topology: str = "dissemination",
+    num_rotations: int = 2,
+    gossip_mode: str = "static",
+    gossip_fused: bool = False,
+    gossip_alpha: float = 0.5,
+    mix_impl: Optional[Callable] = None,
+    rotate_samples: Optional[bool] = None,
+    remat: bool = True,
+    remat_policy=None,
+    ssm_scan_impl=None,
+    seed: int = 0,
+) -> TrainStepBundle:
+    """Build the train step for (cfg, mesh, protocol). ``state_shapes`` /
+    ``batch_shapes`` are ShapeDtypeStruct trees (e.g. from jax.eval_shape) so
+    nothing is materialized — the dry-run path."""
+    mesh = dist.mesh
+    if rotate_samples is None:
+        rotate_samples = protocol == "gossip"
+
+    state_specs = state_specs_of(dist, state_shapes, state_axes)
+    param_specs = state_specs["params"]
+    batch_specs = jax.tree.map(
+        lambda x: dist.replica_batch_spec(x.ndim), batch_shapes)
+
+    proto = make_protocol(
+        protocol, mesh, dist.dp_axes, param_specs,
+        topology=topology, num_rotations=num_rotations, alpha=gossip_alpha,
+        mode=gossip_mode, fused=gossip_fused, mix_impl=mix_impl, seed=seed)
+
+    # per-layer remat happens inside the stack (blocks.stack_apply) — the
+    # whole-loss checkpoint variant kept 130+GB of scan residuals alive.
+    loss_fn = make_loss_fn(cfg, ssm_scan_impl=ssm_scan_impl, remat=remat,
+                           remat_policy=remat_policy)
+    grad_fn = jax.vmap(jax.value_and_grad(loss_fn, has_aux=True))
+
+    shuffle = None
+    if rotate_samples and dist.dp > 1:
+        shuffle = make_ring_shuffle(mesh, dist.dp_axes, batch_specs)
+
+    def train_step(state, batch, *, phase: int):
+      with use_distribution(dist):
+        params = state["params"]
+        batch = jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, dist.sharding(s)),
+            batch, batch_specs)
+        (_, metrics), grads = grad_fn(params, batch)
+        grads = proto.comm_grads(grads, phase)
+        new_params, new_opt = optimizer.update(params, grads, state["opt"])
+        new_params = proto.comm_params(new_params, phase)
+        new_params = jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, dist.sharding(s)),
+            new_params, param_specs)
+        next_batch = shuffle(batch) if shuffle is not None else batch
+        metrics = jax.tree.map(lambda m: m.mean(), metrics)
+        return {"params": new_params, "opt": new_opt}, next_batch, metrics
+
+    return TrainStepBundle(
+        step_fn=train_step, state_specs=state_specs, batch_specs=batch_specs,
+        protocol=proto, dist=dist, cfg=cfg, optimizer=optimizer)

@@ -1,0 +1,177 @@
+"""Attention-mixer unit tests: GQA grouping, windows, qk-norm, partial
+rotary, MLA absorbed decode."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (attn_apply, attn_cache_init, attn_decode,
+                                    attn_init, causal_window_mask, mla_apply,
+                                    mla_cache_init, mla_decode, mla_init)
+from repro.models.config import AttnSpec, MLASpec
+from repro.models.rotary import apply_rope, rope_frequencies
+
+
+def _spec(**kw):
+    base = dict(n_heads=4, n_kv_heads=4, head_dim=16)
+    base.update(kw)
+    return AttnSpec(**base)
+
+
+def test_causal_window_mask():
+    m = causal_window_mask(4, 4, None)
+    assert np.array_equal(np.asarray(m), np.tril(np.ones((4, 4), bool)))
+    mw = np.asarray(causal_window_mask(4, 4, 2))
+    assert mw[3, 3] and mw[3, 2] and not mw[3, 1] and not mw[3, 0]
+
+
+def test_gqa_equals_repeated_mha():
+    """GQA(kv=2) == MHA where kv heads are explicitly duplicated."""
+    key = jax.random.key(0)
+    d = 32
+    gqa = _spec(n_heads=4, n_kv_heads=2)
+    p, _ = attn_init(key, d, gqa, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 8, d)) * 0.3
+    out = attn_apply(p, gqa, x)
+
+    mha = _spec(n_heads=4, n_kv_heads=4)
+    p2 = dict(p)
+    # duplicate each kv head for its 2 query heads: head h uses kv h//2
+    rep = jnp.repeat(p["wk"], 2, axis=1)
+    p2["wk"] = rep
+    p2["wv"] = jnp.repeat(p["wv"], 2, axis=1)
+    out2 = attn_apply(p2, mha, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_window_matches_truncated_context():
+    """With window w, position i attends only to the last w positions —
+    logits at position i equal full attention over x[i-w+1 : i+1]."""
+    key = jax.random.key(0)
+    d, S, w = 32, 10, 3
+    spec = _spec(window=w)
+    p, _ = attn_init(key, d, spec, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (1, S, d)) * 0.5
+    out = attn_apply(p, spec, x)
+    # compare last position against full attention on the trailing window,
+    # with positions preserved (rope depends on absolute positions)
+    full = _spec()
+    out_w = attn_apply(p, full, x[:, S - w:],
+                       positions=jnp.arange(S - w, S)[None])
+    np.testing.assert_allclose(np.asarray(out[:, -1]), np.asarray(out_w[:, -1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_matches_train_full_and_windowed():
+    key = jax.random.key(2)
+    d, S = 32, 9
+    for window in (None, 4):
+        spec = _spec(window=window, n_kv_heads=2)
+        p, _ = attn_init(key, d, spec, jnp.float32)
+        x = jax.random.normal(jax.random.key(3), (2, S, d)) * 0.4
+        full = attn_apply(p, spec, x)
+        cache = attn_cache_init(spec, 2, S if window is None else window,
+                                jnp.float32)
+        outs = []
+        for t in range(S):
+            y, cache = attn_decode(p, spec, x[:, t:t + 1], cache, jnp.int32(t))
+            outs.append(y)
+        dec = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_qk_norm_changes_output_and_stays_finite():
+    key = jax.random.key(0)
+    d = 32
+    sp_no = _spec()
+    sp_qk = _spec(qk_norm=True)
+    p, _ = attn_init(key, d, sp_qk, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (1, 6, d))
+    out_qk = attn_apply(p, sp_qk, x)
+    out_no = attn_apply(p, sp_no, x)
+    assert bool(jnp.isfinite(out_qk).all())
+    assert float(jnp.abs(out_qk - out_no).max()) > 1e-6
+
+
+def test_partial_rotary_only_rotates_prefix():
+    cos, sin = rope_frequencies(8, jnp.arange(4)[None])
+    x = jnp.ones((1, 4, 2, 16))
+    y = apply_rope(x, cos, sin, 8)
+    # dims >= 8 untouched
+    np.testing.assert_allclose(np.asarray(y[..., 8:]), 1.0)
+    assert float(jnp.abs(y[..., :8] - 1.0).max()) > 1e-3
+
+
+def test_rope_position_zero_identity():
+    cos, sin = rope_frequencies(16, jnp.zeros((1, 1), jnp.int32))
+    x = jax.random.normal(jax.random.key(0), (1, 1, 2, 16))
+    np.testing.assert_allclose(np.asarray(apply_rope(x, cos, sin)),
+                               np.asarray(x), rtol=1e-6)
+
+
+def test_mla_decode_matches_train():
+    """Absorbed-latent decode == full-rank train attention, token by token."""
+    key = jax.random.key(0)
+    d = 48
+    spec = MLASpec(n_heads=4, q_lora_rank=24, kv_lora_rank=16, qk_nope_dim=8,
+                   qk_rope_dim=8, v_head_dim=8)
+    p, _ = mla_init(key, d, spec, jnp.float32)
+    S = 7
+    x = jax.random.normal(jax.random.key(1), (2, S, d)) * 0.4
+    full = mla_apply(p, spec, x)
+    cache = mla_cache_init(spec, 2, S, jnp.float32)
+    outs = []
+    for t in range(S):
+        y, cache = mla_decode(p, spec, x[:, t:t + 1], cache, jnp.int32(t))
+        outs.append(y)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mla_cache_is_compressed():
+    """MLA's decode cache per token is (kv_lora + rope) floats — much smaller
+    than the equivalent MHA cache (the arch's headline saving)."""
+    spec = MLASpec(n_heads=128, kv_lora_rank=512, qk_rope_dim=64,
+                   qk_nope_dim=128, v_head_dim=128)
+    c = mla_cache_init(spec, 1, 1024, jnp.float32)
+    mla_bytes = sum(np.prod(v.shape) for v in c.values())
+    mha = attn_cache_init(AttnSpec(n_heads=128, n_kv_heads=128, head_dim=128),
+                          1, 1024, jnp.float32)
+    mha_bytes = sum(np.prod(v.shape) for v in mha.values())
+    assert mla_bytes * 40 < mha_bytes
+
+
+def test_ring_buffer_prefill_then_decode():
+    """long-context mechanism: prefill LONGER than the window fills the ring
+    buffer with the trailing window at the right slots; subsequent decode
+    steps match full-sequence windowed attention."""
+    import dataclasses
+    from repro.models.blocks import _cache_write_seq
+    key = jax.random.key(7)
+    d, w = 32, 4
+    spec = _spec(window=w, n_kv_heads=2)
+    p, _ = attn_init(key, d, spec, jnp.float32)
+    S_pre, S_dec = 11, 4
+    S = S_pre + S_dec
+    x = jax.random.normal(jax.random.key(8), (2, S, d)) * 0.4
+    full = attn_apply(p, spec, x)
+
+    # prefill the ring cache with the first S_pre positions
+    from repro.models.attention import _project_qkv
+    q, k, v = _project_qkv(p, spec, x[:, :S_pre], x[:, :S_pre],
+                           jnp.arange(S_pre)[None], jnp.arange(S_pre)[None])
+    cache = attn_cache_init(spec, 2, w, jnp.float32)
+    cache = {"k": _cache_write_seq(cache["k"], k),
+             "v": _cache_write_seq(cache["v"], v)}
+    outs = []
+    for t in range(S_pre, S):
+        y, cache = attn_decode(p, spec, x[:, t:t + 1], cache, jnp.int32(t))
+        outs.append(y)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, S_pre:]),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,97 @@
+"""System-level assertions of the paper's headline claims (Table 1 / §3/§4):
+communication economics, protocol structure, and config completeness."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config, list_archs, with_sliding_window
+from repro.core import build_schedule, gossip_bytes_per_step, log2_steps
+from repro.models import segments_of
+
+
+def test_all_ten_archs_registered():
+    expected = {
+        "falcon-mamba-7b", "qwen3-0.6b", "olmo-1b", "kimi-k2-1t-a32b",
+        "whisper-base", "stablelm-1.6b", "jamba-v0.1-52b",
+        "deepseek-v3-671b", "llava-next-mistral-7b", "internlm2-20b",
+    }
+    assert set(list_archs()) == expected
+    for a in expected:
+        cfg = get_config(a)
+        assert cfg.source, f"{a} missing source citation"
+
+
+def test_assigned_dimensions_exact():
+    """Configs match the assignment table exactly."""
+    t = {
+        "falcon-mamba-7b": (64, 4096, 65024),
+        "qwen3-0.6b": (28, 1024, 151936),
+        "olmo-1b": (16, 2048, 50304),
+        "kimi-k2-1t-a32b": (61, 7168, 163840),
+        "whisper-base": (6, 512, 51865),
+        "stablelm-1.6b": (24, 2048, 100352),
+        "jamba-v0.1-52b": (32, 4096, 65536),
+        "deepseek-v3-671b": (61, 7168, 129280),
+        "llava-next-mistral-7b": (32, 4096, 32000),
+        "internlm2-20b": (48, 6144, 92544),
+    }
+    for a, (L, d, v) in t.items():
+        cfg = get_config(a)
+        assert (cfg.n_layers, cfg.d_model, cfg.vocab) == (L, d, v), a
+
+
+def test_moe_expert_counts():
+    assert get_config("kimi-k2-1t-a32b").blocks[0].moe.n_experts == 384
+    assert get_config("kimi-k2-1t-a32b").blocks[0].moe.top_k == 8
+    dsv3 = get_config("deepseek-v3-671b")
+    assert dsv3.blocks[-1].moe.n_experts == 256
+    assert dsv3.blocks[-1].moe.n_shared == 1
+    assert dsv3.mtp
+    jamba = get_config("jamba-v0.1-52b")
+    moes = [b for b in jamba.blocks if b.moe is not None]
+    assert len(moes) == 16 and moes[0].moe.top_k == 2
+
+
+def test_jamba_interleave_ratio():
+    """1 attention : 7 mamba per 8-layer unit."""
+    jamba = get_config("jamba-v0.1-52b")
+    kinds = [b.kind for b in jamba.blocks]
+    assert kinds.count("attn") == 4 and kinds.count("mamba") == 28
+    segs = segments_of(jamba.blocks)
+    assert len(segs) == 1 and len(segs[0][0]) == 8 and segs[0][1] == 4
+
+
+def test_input_shapes_table():
+    assert SHAPES["train_4k"] == (4096, 256, "train")
+    assert SHAPES["prefill_32k"] == (32768, 32, "prefill")
+    assert SHAPES["decode_32k"] == (32768, 128, "decode")
+    assert SHAPES["long_500k"] == (524288, 1, "decode")
+
+
+def test_subquadratic_classification():
+    assert get_config("falcon-mamba-7b").subquadratic()
+    assert get_config("llava-next-mistral-7b").subquadratic()  # SW 4096
+    assert not get_config("qwen3-0.6b").subquadratic()
+    assert not get_config("jamba-v0.1-52b").subquadratic()  # full attn layers
+    sw = with_sliding_window(get_config("qwen3-0.6b"), 8192)
+    assert sw.subquadratic()
+
+
+def test_gossip_communication_is_O1_in_p():
+    """Paper Table 1: gossip per-chip bytes independent of p; all-reduce
+    grows toward 2x model bytes with log(p) latency steps."""
+    rb = 2 * 10**9  # 1B params bf16
+    b8 = gossip_bytes_per_step(rb, dp=8, model_shards=16)
+    b512 = gossip_bytes_per_step(rb, dp=512, model_shards=16)
+    assert b8["gossip_bytes_per_chip"] == b512["gossip_bytes_per_chip"]
+    assert b8["gossip_latency_steps"] == b512["gossip_latency_steps"] == 1
+    assert b512["allreduce_latency_steps"] == 9
+    assert b512["allreduce_bytes_per_chip"] > 1.9 * b512["gossip_bytes_per_chip"]
+
+
+def test_schedule_period_scales_log_p():
+    for p in (4, 16, 64, 256):
+        s = build_schedule(p, num_rotations=2)
+        assert s.substeps == log2_steps(p) == int(math.log2(p))
+        assert s.period == 2 * s.substeps
