@@ -1,14 +1,109 @@
 """Microbenchmarks of the Pallas kernels (interpret mode on CPU — these
 numbers validate plumbing, not TPU perf; the roofline table carries the
-hardware story) plus their pure-jnp references on CPU."""
+hardware story) plus their pure-jnp references on CPU, plus the gossip
+ENGINE comparison: packed persistent buckets vs per-leaf vs the old
+``fused=True`` concat-every-step path, on the 1.6B-arch leaf structure.
+
+The engine comparison also lands in ``BENCH_gossip_mix.json`` (repo root) so
+the perf trajectory is machine-readable across PRs.
+"""
 from __future__ import annotations
+
+import json
+import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.configs import get_config
+from repro.core.buckets import build_layout
 from repro.kernels import flash_mha, gossip_mix_flat, ssm_scan
 from repro.kernels.ref import attention_ref, gossip_mix_ref, ssm_scan_ref
+from repro.models import lm_init, reduced
 from .common import timed_us
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                          "BENCH_gossip_mix.json")
+ALPHA = 0.5
+
+
+def _mix(a, b):
+    return (a * (1.0 - ALPHA) + b * ALPHA).astype(a.dtype)
+
+
+def gossip_engine_rows():
+    """Per-mix-step cost of the three gossip packings on the stablelm-1.6b
+    LEAF STRUCTURE (all 24 layers) at laptop width. The mix arithmetic is
+    identical jnp in all three, so the measurement isolates the packing
+    strategy: per-leaf = n_leaves launches, old fused = concat + fp32 casts +
+    split EVERY step, packed = pre-packed dtype-native buckets, mix only."""
+    cfg = reduced(get_config("stablelm-1.6b"), n_layers=24, d_model=128)
+    params, _ = lm_init(jax.random.key(0), cfg)
+    partner = jax.tree.map(lambda x: x + jnp.asarray(0.01, x.dtype), params)
+    n_leaves = len(jax.tree.leaves(params))
+
+    # --- per-leaf: one (overlappable) mix per parameter leaf
+    leaf_fn = jax.jit(lambda A, B: jax.tree.map(_mix, A, B))
+
+    # --- old fused=True: flatten+cast to ONE fp32 buffer every step, mix,
+    # split+cast back (the partner's flat buffer arrives from the ppermute,
+    # so it is pre-flattened outside the timed region)
+    leaves, treedef = jax.tree.flatten(params)
+    shapes = [l.shape for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+
+    def fused(A, bflat):
+        ls = jax.tree.leaves(A)
+        buf = jnp.concatenate([l.astype(jnp.float32).reshape(-1) for l in ls])
+        buf = _mix(buf, bflat)
+        out, off = [], 0
+        for shp, dt in zip(shapes, dtypes):
+            n = int(np.prod(shp))
+            out.append(buf[off:off + n].reshape(shp).astype(dt))
+            off += n
+        return jax.tree.unflatten(treedef, out)
+
+    fused_fn = jax.jit(fused)
+    bflat = jnp.concatenate(
+        [l.astype(jnp.float32).reshape(-1) for l in jax.tree.leaves(partner)])
+
+    # --- packed engine: buckets packed ONCE outside the loop; the step is
+    # one mix per bucket, native dtype, no concat/split/cast
+    layout = build_layout(params)
+    bkts_a = layout.pack(params)
+    bkts_b = layout.pack(partner)
+    packed_fn = jax.jit(lambda A, B: tuple(_mix(a, b) for a, b in zip(A, B)))
+
+    t_leaf = timed_us(lambda: leaf_fn(params, partner), iters=20)
+    t_fused = timed_us(lambda: fused_fn(params, bflat), iters=20)
+    t_packed = timed_us(lambda: packed_fn(bkts_a, bkts_b), iters=20)
+
+    summ = layout.summary()
+    record = {
+        "arch": cfg.name,
+        "structure": "24-layer stablelm-1.6b leaf tree @ d_model=128",
+        "n_leaves": n_leaves,
+        "n_buckets": summ["num_buckets"],
+        "exact_bytes": summ["exact_bytes"],
+        "padded_bytes": summ["padded_bytes"],
+        "pad_overhead": summ["pad_overhead"],
+        "us_per_mix_step": {"per_leaf": t_leaf, "old_fused": t_fused,
+                            "packed": t_packed},
+        "packed_speedup_vs_old_fused": t_fused / max(t_packed, 1e-9),
+        "packed_speedup_vs_per_leaf": t_leaf / max(t_packed, 1e-9),
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(record, f, indent=1)
+
+    return [
+        ("gossip_engine_per_leaf_1p6b", t_leaf, f"launches={n_leaves}"),
+        ("gossip_engine_old_fused_1p6b", t_fused,
+         "concat+f32cast+split every step"),
+        ("gossip_engine_packed_1p6b", t_packed,
+         f"buckets={summ['num_buckets']};"
+         f"speedup_vs_fused={record['packed_speedup_vs_old_fused']:.2f}x"),
+    ]
 
 
 def rows():
@@ -22,6 +117,7 @@ def rows():
     out.append(("kernel_gossip_mix_1M_ref",
                 timed_us(lambda: jax.jit(gossip_mix_ref)(a, b), iters=5),
                 "jnp"))
+    out.extend(gossip_engine_rows())
     dA = jax.random.uniform(key, (1, 256, 64, 8), minval=.5, maxval=1.)
     dBx = jax.random.normal(jax.random.fold_in(key, 2), (1, 256, 64, 8))
     out.append(("kernel_ssm_scan_interp",

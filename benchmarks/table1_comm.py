@@ -1,6 +1,9 @@
 """Paper Table 1 + §3 economics: per-step communication of GossipGraD vs
-all-reduce SGD, (a) analytically across p, and (b) measured from the compiled
-dry-run HLO (collective-permute vs all-reduce bytes in the train step)."""
+all-reduce SGD, (a) analytically across p, (b) measured from the compiled
+dry-run HLO (collective-permute vs all-reduce bytes in the train step), and
+(c) the bucketed-engine packing economics on the FULL-size 1.6B config:
+launches and bytes moved per gossip step for packed vs per-leaf vs the old
+fused fp32-scratch path."""
 from __future__ import annotations
 
 import glob
@@ -8,12 +11,45 @@ import json
 import math
 import os
 
+import jax
+import numpy as np
+
 from repro.core import gossip_bytes_per_step
+from repro.core.buckets import build_layout
 from .common import ICI
+
+
+def packed_engine_rows():
+    """Bytes-on-the-wire and launch counts per gossip step, full-size
+    stablelm-1.6b (eval_shape only — nothing allocates). The old fused path
+    staged everything through ONE fp32 scratch (2x bytes for bf16 params +
+    per-step pack/unpack); buckets move the native-dtype bytes in
+    O(num_buckets) overlappable collectives with no per-step packing."""
+    from repro.configs import get_config
+    from repro.models import lm_init
+
+    cfg = get_config("stablelm-1.6b")
+    shapes = jax.eval_shape(lambda: lm_init(jax.random.key(0), cfg)[0])
+    layout = build_layout(shapes)
+    s = layout.summary()
+    fused_bytes = sum(int(np.prod(l.shape)) * 4  # fp32 scratch, any dtype
+                      for l in jax.tree.leaves(shapes))
+    return [
+        ("table1_packed_bytes_1p6b", s["padded_bytes"] / ICI * 1e6,
+         f"launches={s['num_buckets']};bytes={s['padded_bytes']:.3e};"
+         f"pad_overhead={s['pad_overhead']:.4f};native_dtype"),
+        ("table1_per_leaf_bytes_1p6b", s["exact_bytes"] / ICI * 1e6,
+         f"launches={s['num_leaves']};bytes={s['exact_bytes']:.3e};"
+         "native_dtype"),
+        ("table1_old_fused_bytes_1p6b", fused_bytes / ICI * 1e6,
+         f"launches=1;bytes={fused_bytes:.3e};fp32_scratch+"
+         "per_step_pack_unpack"),
+    ]
 
 
 def rows():
     out = []
+    out.extend(packed_engine_rows())
     replica_bytes = 2 * 600e6  # qwen3-0.6b bf16
     for p in (4, 8, 16, 32, 64, 128, 256, 512):
         b = gossip_bytes_per_step(replica_bytes, dp=p, model_shards=16)

@@ -5,6 +5,12 @@ dtypes, and user metadata so restore can validate structure. Works on any
 state pytree (train state with replica axis included). Arrays are pulled to
 host with ``jax.device_get`` (for sharded arrays this gathers addressable
 shards — single-process semantics, which is what this container runs).
+
+Bucketed gossip state (core.buckets.PackedParams) is read THROUGH the view
+layer: save unpacks every PackedParams node to its named leaf tree before
+writing, and restore re-packs after reading. The on-disk format is therefore
+identical between the packed and per-leaf engines — a packed run can restore
+a leaf checkpoint and vice versa.
 """
 from __future__ import annotations
 
@@ -15,9 +21,39 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.core.buckets import PackedParams
+
 PyTree = Any
 
 __all__ = ["save_state", "restore_state"]
+
+
+def _is_packed(x) -> bool:
+    return isinstance(x, PackedParams)
+
+
+def _unpack_view(tree: PyTree) -> PyTree:
+    """Replace every PackedParams node by its unpacked leaf tree."""
+    return jax.tree.map(lambda x: x.unpack() if _is_packed(x) else x,
+                        tree, is_leaf=_is_packed)
+
+
+def _pack_like(template: PyTree, tree: PyTree) -> PyTree:
+    """Re-pack ``tree`` (unpacked form) along ``template``'s PackedParams
+    nodes, reusing the template's layouts."""
+    if _is_packed(template):
+        return PackedParams(template.layout.pack(tree), template.layout)
+    if isinstance(template, dict):
+        return {k: _pack_like(template[k], tree[k]) for k in template}
+    if isinstance(template, (list, tuple)):
+        vals = (_pack_like(t, v) for t, v in zip(template, tree))
+        return (type(template)(*vals) if hasattr(template, "_fields")
+                else type(template)(vals))
+    if any(_is_packed(l) for l in jax.tree.leaves(template, is_leaf=_is_packed)):
+        raise TypeError(
+            f"cannot re-pack through container {type(template).__name__}: "
+            "PackedParams nodes must sit under dict/list/tuple state trees")
+    return tree
 
 
 def _flatten(tree: PyTree):
@@ -32,8 +68,10 @@ def _flatten(tree: PyTree):
 def save_state(path: str, state: PyTree, metadata: Optional[Dict] = None,
                step: Optional[int] = None) -> None:
     os.makedirs(path, exist_ok=True)
-    keyed, _ = _flatten(state)
-    arrays = {k: np.asarray(jax.device_get(v)) for k, v in keyed.items()}
+    # pull buckets to host BEFORE unpacking: host-side numpy unpack is
+    # zero-copy views, so no second device-side copy of the state exists
+    keyed, _ = _flatten(_unpack_view(jax.device_get(state)))
+    arrays = {k: np.asarray(v) for k, v in keyed.items()}
     # npz cannot store ml_dtypes (bf16/f8): stage them as f32 and record the
     # original dtype in the manifest for restore
     dtypes = {k: str(v.dtype) for k, v in arrays.items()}
@@ -57,13 +95,18 @@ def save_state(path: str, state: PyTree, metadata: Optional[Dict] = None,
 
 def restore_state(path: str, template: PyTree) -> Tuple[PyTree, Dict]:
     """Restore into the structure of ``template`` (shapes/dtypes validated).
-    Returns (state, manifest)."""
+    PackedParams nodes in the template are restored through their unpacked
+    leaf view and re-packed. Returns (state, manifest)."""
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(path, "arrays.npz"))
     names = manifest["keys"]
     arrays = {k: data[f"a{i}"] for i, k in enumerate(names)}
 
+    packed_template = template
+    # abstract unpack: only shapes/dtypes are needed for validation — never
+    # materialize a full unpacked copy of the packed state on device
+    template = jax.eval_shape(_unpack_view, template)
     keyed, _ = _flatten(template)
     if set(keyed) != set(arrays):
         missing = sorted(set(keyed) - set(arrays))[:5]
@@ -79,4 +122,5 @@ def restore_state(path: str, template: PyTree) -> Tuple[PyTree, Dict]:
             raise ValueError(f"shape mismatch at {key}: "
                              f"{arr.shape} vs {np.shape(leaf)}")
         out.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
-    return jax.tree_util.tree_unflatten(treedef, out), manifest
+    restored = jax.tree_util.tree_unflatten(treedef, out)
+    return _pack_like(packed_template, restored), manifest

@@ -1,0 +1,84 @@
+"""Compatibility shims for older jax releases.
+
+The codebase targets the current jax API (``jax.shard_map``,
+``jax.sharding.AxisType``, ``jax.make_mesh(..., axis_types=...)``); the
+container pins jax 0.4.x where those live under different names. ``install``
+grafts thin adapters onto the jax namespace — each one guarded by a hasattr
+check, so on a current jax this module is a no-op. Installed automatically by
+``repro/__init__.py`` before any submodule import runs.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+def _install_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _install_make_mesh() -> None:
+    # signature inspection, not a probe call: constructing a Mesh would
+    # initialize the jax backend as an import side effect and freeze the
+    # device count before tests can set XLA_FLAGS
+    base = getattr(jax, "make_mesh", None)
+    if base is not None:
+        try:
+            params = inspect.signature(base).parameters
+        except (TypeError, ValueError):
+            params = {}
+        if "axis_types" in params:
+            return  # current API
+
+        @functools.wraps(base)
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None,
+                      devices=None):
+            del axis_types  # pre-AxisType jax: every axis behaves as Auto
+            return base(axis_shapes, axis_names, devices=devices)
+    else:
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None,
+                      devices=None):
+            # jax without make_mesh at all: build the Mesh directly
+            del axis_types
+            import numpy as np
+            n = int(np.prod(axis_shapes))
+            devs = list(devices) if devices is not None else jax.devices()[:n]
+            return jax.sharding.Mesh(
+                np.asarray(devs).reshape(axis_shapes), axis_names)
+
+    jax.make_mesh = make_mesh
+
+
+def _install_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as base
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+                  axis_names=None):
+        kw = {}
+        if axis_names is not None:
+            # new API: axis_names = the manual axes; old API: auto = the rest
+            kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+        check_rep = True if check_vma is None else bool(check_vma)
+        return base(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    check_rep=check_rep, **kw)
+
+    jax.shard_map = shard_map
+
+
+def install() -> None:
+    _install_axis_type()
+    _install_make_mesh()
+    _install_shard_map()

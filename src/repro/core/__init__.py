@@ -4,7 +4,10 @@ from .topology import (GossipSchedule, build_schedule, diffusion_steps,
                        reachability, ring_partner)
 from .mixing import (consensus_contraction, is_doubly_stochastic,
                      mixing_matrix, round_matrix, spectral_gap)
-from .gossip import gossip_bytes_per_step, linear_pairs, make_gossip_mix
+from .buckets import (BucketLayout, LeafSlot, PackedParams, build_layout,
+                      packed_param_specs)
+from .gossip import (gossip_bytes_per_step, linear_pairs, make_gossip_mix,
+                     make_packed_gossip_mix)
 from .protocols import PROTOCOLS, Protocol, make_protocol
 from .shuffle import RingShardRotation, make_ring_shuffle
 from .simulate import (allreduce_mean_sim, gossip_mix_sim,

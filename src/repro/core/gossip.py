@@ -15,7 +15,16 @@ pairs and hoists compute between them natively, so the *structural* analogue
 is to issue one ppermute per parameter leaf ("layer-wise", the default) so the
 scheduler can overlap each with surrounding compute. A ``fused`` variant
 concatenates all leaves into a single buffer (one collective, less overlap
-surface, lower launch overhead) — the trade-off is a §Perf knob.
+surface, lower launch overhead) — but it pays a full pack/unpack round-trip
+through HBM plus fp32 casts on EVERY mix step, so it is kept only as the
+reference point the benchmarks beat.
+
+The production path is the **bucketed engine** (``make_packed_gossip_mix``):
+parameters live in a handful of persistent LANE-aligned, dtype-homogeneous
+buckets (core.buckets) packed once at init; each mix step is one ppermute +
+one in-place Pallas mix per bucket — the per-leaf path's overlap surface at
+O(buckets) launch cost, with zero per-step packing, zero casts, and native
+bf16 wire format.
 
 Two phase-selection modes:
 
@@ -36,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .buckets import BucketLayout, packed_param_specs
 from .topology import GossipSchedule
 
 PyTree = Any
@@ -43,6 +53,7 @@ PyTree = Any
 __all__ = [
     "linear_pairs",
     "make_gossip_mix",
+    "make_packed_gossip_mix",
     "gossip_bytes_per_step",
 ]
 
@@ -86,7 +97,6 @@ def make_gossip_mix(
         raise ValueError(
             f"schedule built for p={schedule.p} but mesh axes {axis_names} "
             f"give dp={dp}")
-    all_pairs = [linear_pairs(schedule, t) for t in range(schedule.period)]
 
     def local_mix(pairs: Tuple[Tuple[int, int], ...], params: PyTree) -> PyTree:
         if fused:
@@ -104,6 +114,15 @@ def make_gossip_mix(
             return jax.tree.unflatten(treedef, out)
         return jax.tree.map(
             lambda x: _mix_leaf(x, axis_names, pairs, alpha, mix_impl), params)
+
+    return _phase_dispatch(mesh, schedule, param_specs, local_mix, mode)
+
+
+def _phase_dispatch(mesh: Mesh, schedule: GossipSchedule, param_specs: PyTree,
+                    local_mix: Callable, mode: str) -> Callable:
+    """Wrap a per-device ``local_mix(pairs, params)`` into ``mix(params,
+    phase)`` under shard_map, with static or dynamic phase selection."""
+    all_pairs = [linear_pairs(schedule, t) for t in range(schedule.period)]
 
     def shmapped(fn):
         return jax.shard_map(
@@ -135,6 +154,34 @@ def make_gossip_mix(
         return mix
 
     raise ValueError(f"unknown gossip mode {mode!r}")
+
+
+def make_packed_gossip_mix(
+    mesh: Mesh,
+    axis_names: Sequence[str],
+    schedule: GossipSchedule,
+    layout: BucketLayout,
+    *,
+    alpha: float = 0.5,
+    mode: str = "static",
+    mix_impl: Callable | None = None,
+) -> Callable[[PyTree, Any], PyTree]:
+    """Build ``mix(packed, phase) -> packed`` over persistent gossip buckets.
+
+    ``packed`` is a core.buckets.PackedParams whose buckets carry a leading
+    replica axis sharded over ``axis_names``. Each step issues exactly one
+    ppermute + one mix per bucket — no per-step concatenation, no casts
+    (buckets are dtype-homogeneous), and the mix can run in place
+    (``mix_impl`` defaults to plain jnp; pass kernels.gossip_mix_bucket for
+    the donation-friendly Pallas path).
+
+    Packing flattens each replica, so the layout is only sharding-compatible
+    with distributions that shard nothing beyond the replica axis (pure_dp /
+    smoke meshes); tensor-parallel `replica`-mode keeps the per-leaf path.
+    """
+    specs = packed_param_specs(layout, tuple(axis_names))
+    return make_gossip_mix(mesh, axis_names, schedule, specs, alpha=alpha,
+                           mode=mode, fused=False, mix_impl=mix_impl)
 
 
 def gossip_bytes_per_step(replica_bytes: int, dp: int, model_shards: int = 1) -> dict:

@@ -30,7 +30,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from .gossip import make_gossip_mix
+from .buckets import BucketLayout
+from .gossip import make_gossip_mix, make_packed_gossip_mix
 from .topology import GossipSchedule, build_schedule
 
 PyTree = Any
@@ -91,12 +92,16 @@ def make_protocol(
     mode: str = "static",
     fused: bool = False,
     mix_impl: Callable | None = None,
+    packed_layout: BucketLayout | None = None,
     seed: int = 0,
 ) -> Protocol:
     """Build a Protocol for ``mesh`` with replicas over ``data_axes``.
 
     ``param_specs`` must be the PartitionSpec tree of the replica-axis
     parameter representation (leading axis sharded over ``data_axes``).
+    With ``packed_layout``, params are core.buckets.PackedParams and the
+    gossip mix runs the bucketed engine (one ppermute + in-place mix per
+    persistent bucket) instead of the per-leaf or fused paths.
     """
     if name not in PROTOCOLS:
         raise ValueError(f"unknown protocol {name!r}; options {PROTOCOLS}")
@@ -108,8 +113,13 @@ def make_protocol(
         schedule = build_schedule(dp, topology=topology,
                                   num_rotations=num_rotations, seed=seed)
     if dp > 1 and name == "gossip":
-        mix = make_gossip_mix(mesh, data_axes, schedule, param_specs,
-                              alpha=alpha, mode=mode, fused=fused,
-                              mix_impl=mix_impl)
+        if packed_layout is not None:
+            mix = make_packed_gossip_mix(mesh, data_axes, schedule,
+                                         packed_layout, alpha=alpha,
+                                         mode=mode, mix_impl=mix_impl)
+        else:
+            mix = make_gossip_mix(mesh, data_axes, schedule, param_specs,
+                                  alpha=alpha, mode=mode, fused=fused,
+                                  mix_impl=mix_impl)
     return Protocol(name=name, dp=dp, schedule=schedule, _mix=mix,
                     dynamic=(mode == "dynamic"))

@@ -3,6 +3,6 @@
 #   gossip_mix      — the paper's per-step (w + w_recv)/2 fused elementwise
 #   ssm_scan        — chunked Mamba selective scan (falcon-mamba / jamba)
 #   flash_attention — blocked causal attention w/ online softmax + windows
-from .ops import (INTERPRET, flash_mha, gossip_mix_flat, gossip_mix_tree,
-                  ssm_scan)
+from .ops import (INTERPRET, flash_mha, gossip_mix_bucket, gossip_mix_flat,
+                  gossip_mix_tree, ssm_scan)
 from . import ref

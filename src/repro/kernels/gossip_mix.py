@@ -6,9 +6,15 @@ shard. Fusing it into one VMEM-tiled elementwise kernel avoids materializing
 ``recv`` round-trips through HBM between the collective and the averaging —
 on a 7B-replica gossip step that's ~14 GB of avoided HBM traffic per mix.
 
-Layout: inputs are flattened to (M, LANE) with LANE=128-aligned columns; the
-grid tiles rows so each step's working set (3 tiles) fits comfortably in the
-~16 MB/core VMEM budget.
+Layout: buffers are viewed as (M, LANE) with LANE=128 columns; the grid tiles
+rows so each step's working set (3 tiles) fits comfortably in the ~16 MB/core
+VMEM budget. The kernel is dtype-native — bf16 buckets are loaded as bf16,
+mixed in fp32 on the VPU, and stored back as bf16, so no fp32 scratch copy of
+the parameters ever exists. ``gossip_mix_1d`` additionally handles buffers
+whose length is not a LANE multiple by mixing the ragged tail (< 128
+elements) in a jnp epilogue instead of padding-copying the whole buffer, and
+can alias its output onto the local input (``donate=True``) so the mix runs
+in place on the persistent gossip buckets.
 """
 from __future__ import annotations
 
@@ -18,22 +24,28 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["gossip_mix_2d", "LANE", "DEFAULT_ROWS"]
+__all__ = ["gossip_mix_2d", "gossip_mix_1d", "LANE", "DEFAULT_ROWS"]
 
 LANE = 128          # TPU lane width
 DEFAULT_ROWS = 512  # rows per tile: 512*128*4B*3bufs ~= 786 KB of VMEM
 
 
 def _mix_kernel(a_ref, b_ref, o_ref, *, alpha: float):
-    a = a_ref[...]
-    b = b_ref[...]
+    # accumulate in fp32 regardless of the buffer dtype (bf16-native wire
+    # format, full-precision averaging)
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
     o_ref[...] = (a * (1.0 - alpha) + b * alpha).astype(o_ref.dtype)
 
 
 def gossip_mix_2d(a: jnp.ndarray, b: jnp.ndarray, alpha: float = 0.5,
                   block_rows: int = DEFAULT_ROWS,
-                  interpret: bool = False) -> jnp.ndarray:
-    """a, b: (M, N) with N a multiple of LANE; returns the mixed array."""
+                  interpret: bool = False,
+                  donate: bool = False) -> jnp.ndarray:
+    """a, b: (M, N) with N a multiple of LANE; returns the mixed array.
+
+    ``donate=True`` aliases the output buffer onto ``a`` (in-place mix on the
+    persistent bucket — no extra HBM allocation when the caller donates)."""
     assert a.shape == b.shape and a.dtype == b.dtype, (a.shape, b.shape)
     M, N = a.shape
     assert N % LANE == 0, f"last dim {N} must be a multiple of {LANE}"
@@ -46,5 +58,39 @@ def gossip_mix_2d(a: jnp.ndarray, b: jnp.ndarray, alpha: float = 0.5,
         in_specs=[spec, spec],
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+        input_output_aliases={0: 0} if donate else {},
         interpret=interpret,
     )(a, b)
+
+
+def gossip_mix_1d(a: jnp.ndarray, b: jnp.ndarray, alpha: float = 0.5,
+                  block_rows: int = DEFAULT_ROWS,
+                  interpret: bool = False,
+                  donate: bool = False) -> jnp.ndarray:
+    """Mix two flat same-shape buffers of ANY length and dtype.
+
+    The LANE-aligned prefix is viewed as (rows, LANE) — a free reshape, not a
+    pad copy — and mixed by the tiled kernel; the ragged tail (< LANE
+    elements) is mixed by a jnp epilogue. LANE-multiple buffers (the bucket
+    invariant) take the pure-kernel path with no tail and no concatenation.
+    """
+    assert a.shape == b.shape and a.dtype == b.dtype, (a.shape, b.shape)
+    n = a.size
+    av, bv = a.reshape(-1), b.reshape(-1)
+    n_main = (n // LANE) * LANE
+    if n_main == n:  # aligned: single kernel call, in-place capable
+        out = gossip_mix_2d(av.reshape(-1, LANE), bv.reshape(-1, LANE),
+                            alpha=alpha, block_rows=block_rows,
+                            interpret=interpret, donate=donate)
+        return out.reshape(a.shape)
+    parts = []
+    if n_main:
+        parts.append(gossip_mix_2d(
+            av[:n_main].reshape(-1, LANE), bv[:n_main].reshape(-1, LANE),
+            alpha=alpha, block_rows=block_rows, interpret=interpret
+        ).reshape(-1))
+    ta = av[n_main:].astype(jnp.float32)
+    tb = bv[n_main:].astype(jnp.float32)
+    parts.append((ta * (1.0 - alpha) + tb * alpha).astype(a.dtype))
+    out = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+    return out.reshape(a.shape)

@@ -15,13 +15,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from .flash_attention import flash_attention
-from .gossip_mix import LANE, gossip_mix_2d
+from .gossip_mix import LANE, gossip_mix_1d, gossip_mix_2d
 from .ssm_scan import ssm_scan_chunked
 
 PyTree = Any
 
-__all__ = ["INTERPRET", "gossip_mix_flat", "gossip_mix_tree", "ssm_scan",
-           "flash_mha"]
+__all__ = ["INTERPRET", "gossip_mix_flat", "gossip_mix_tree",
+           "gossip_mix_bucket", "ssm_scan", "flash_mha"]
 
 
 def _default_interpret() -> bool:
@@ -37,22 +37,35 @@ INTERPRET = _default_interpret()
 @functools.partial(jax.jit, static_argnames=("alpha",))
 def gossip_mix_flat(a: jnp.ndarray, b: jnp.ndarray,
                     alpha: float = 0.5) -> jnp.ndarray:
-    """Mix two same-shape buffers of any shape via the tiled kernel."""
-    shape, dtype = a.shape, a.dtype
-    n = int(np.prod(shape))
-    cols = LANE
-    rows = -(-n // cols)
-    pad = rows * cols - n
-    af = jnp.pad(a.reshape(-1), (0, pad)).reshape(rows, cols)
-    bf = jnp.pad(b.reshape(-1), (0, pad)).reshape(rows, cols)
-    out = gossip_mix_2d(af, bf, alpha=alpha, interpret=INTERPRET)
-    return out.reshape(-1)[:n].reshape(shape).astype(dtype)
+    """Mix two same-shape buffers of any shape via the tiled kernel.
+
+    Ragged lengths are handled natively by ``gossip_mix_1d`` (aligned prefix
+    through the kernel, < LANE tail in a jnp epilogue) — no full-buffer pad
+    copy."""
+    return gossip_mix_1d(a.reshape(-1), b.reshape(-1), alpha=alpha,
+                         interpret=INTERPRET).reshape(a.shape)
 
 
 def gossip_mix_tree(a: PyTree, b: PyTree, alpha: float = 0.5) -> PyTree:
     """Per-leaf kernel mix — a drop-in ``mix_impl`` for core.gossip
     (signature (local, received, alpha))."""
     return jax.tree.map(lambda x, y: gossip_mix_flat(x, y, alpha=alpha), a, b)
+
+
+def gossip_mix_bucket(a: jnp.ndarray, b: jnp.ndarray,
+                      alpha: float = 0.5) -> jnp.ndarray:
+    """Mix one persistent gossip bucket in place.
+
+    Buckets are LANE-aligned by construction (core.buckets.BucketLayout), so
+    this is a single aliased kernel call — no pad, no tail, no cast: the
+    donation-friendly hot path of the packed gossip engine. Accepts any
+    leading axes (the sharded replica axis) over the flat bucket dim.
+    """
+    n = int(np.prod(a.shape))
+    assert n % LANE == 0, f"bucket size {a.shape} not LANE-aligned"
+    out = gossip_mix_2d(a.reshape(-1, LANE), b.reshape(-1, LANE), alpha=alpha,
+                        interpret=INTERPRET, donate=not INTERPRET)
+    return out.reshape(a.shape)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "block_d"))

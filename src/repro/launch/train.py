@@ -41,6 +41,10 @@ def main() -> None:
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--num-rotations", type=int, default=2)
+    ap.add_argument("--packed", action="store_true",
+                    help="bucketed persistent-buffer gossip engine: params "
+                    "packed once into LANE-aligned buckets, one ppermute + "
+                    "in-place mix per bucket per step")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config on the local device mesh")
     ap.add_argument("--multi-pod", action="store_true")
@@ -71,8 +75,10 @@ def main() -> None:
         cfg, dist, opt, state_shapes=state_shapes, state_axes=state_axes,
         batch_shapes=batch_shapes, protocol=args.protocol,
         topology=args.topology, num_rotations=args.num_rotations,
+        gossip_packed=args.packed,
         remat=not (args.smoke or len(jax.devices()) == 1))
-    state, _ = init_train_state(jax.random.key(0), cfg, dist, opt)
+    state, _ = init_train_state(jax.random.key(0), cfg, dist, opt,
+                                packed=args.packed, layout=bundle.layout)
 
     ds = ShardedTokenDataset(cfg.vocab, args.seq_len,
                              n_shards=max(dist.dp, 1),

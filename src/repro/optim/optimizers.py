@@ -23,6 +23,11 @@ __all__ = ["Optimizer", "sgd", "adamw", "lars"]
 class Optimizer:
     init: Callable[[PyTree], PyTree]
     update: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree]]
+    # True when update is purely elementwise per leaf — such optimizers are
+    # transparent to the bucketed gossip engine (core.buckets), which fuses
+    # many layers into one flat leaf. Norm-based per-leaf updates (lars) set
+    # False and must stay on the per-leaf path.
+    elementwise: bool = True
 
 
 def sgd(schedule: Schedule | float, momentum: float = 0.9,
@@ -90,7 +95,7 @@ def lars(schedule: Schedule | float, momentum: float = 0.9,
                                is_leaf=lambda x: isinstance(x, tuple))
         return new_params, {"step": state["step"] + 1, "mom": new_mom}
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, elementwise=False)
 
 
 def adamw(schedule: Schedule | float, b1: float = 0.9, b2: float = 0.95,

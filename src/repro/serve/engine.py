@@ -58,8 +58,10 @@ class ServingEngine:
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
         pos = S + n_img
         for t in range(max_new_tokens):
-            out.append(np.asarray(tok))
+            # keep tokens on device: a per-token np.asarray would block
+            # dispatch every iteration; one transfer happens after the loop
+            out.append(tok)
             logits, cache = self._decode(self.params, tok, cache,
                                          jnp.int32(pos + t))
             tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        return np.stack(out, axis=1)
+        return np.asarray(jnp.stack(out, axis=1))

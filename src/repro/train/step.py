@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import make_protocol, make_ring_shuffle
+from repro.core.buckets import PackedParams, build_layout, packed_param_specs
 from repro.dist_ctx import use_distribution
 from repro.models import lm_init
 from repro.models.config import ModelConfig
@@ -43,7 +44,7 @@ __all__ = ["TrainStepBundle", "make_train_step_bundle", "init_train_state"]
 
 class TrainStepBundle:
     def __init__(self, *, step_fn, state_specs, batch_specs, protocol, dist,
-                 cfg, optimizer):
+                 cfg, optimizer, layout=None):
         self.step_fn = step_fn          # (state, batch, *, phase:int static)
         self.state_specs = state_specs
         self.batch_specs = batch_specs
@@ -51,6 +52,7 @@ class TrainStepBundle:
         self.dist = dist
         self.cfg = cfg
         self.optimizer = optimizer
+        self.layout = layout            # BucketLayout when gossip_packed
 
     def jitted(self, phase: int, donate: bool = True):
         fn = functools.partial(self.step_fn, phase=phase)
@@ -68,20 +70,32 @@ def _replicate_tree(tree: PyTree, dp: int) -> PyTree:
 
 
 def init_train_state(key, cfg: ModelConfig, dist: Distribution,
-                     optimizer: Optimizer):
+                     optimizer: Optimizer, *, packed: bool = False,
+                     layout=None):
     """(state, state_axes): state = {"params","opt"}, leaves carry a leading
-    replica axis of size dist.dp (1 in single-pod fsdp mode)."""
+    replica axis of size dist.dp (1 in single-pod fsdp mode).
+
+    ``packed=True`` stores params (and hence optimizer state) as
+    core.buckets.PackedParams — the one-time pack of the bucketed gossip
+    engine. Pass the bundle's ``layout`` so state and step agree. The
+    returned ``state_axes`` always annotate the UNPACKED leaf tree (packed
+    state derives its specs from the layout via packed_param_specs, not from
+    axes)."""
     params, axes = lm_init(key, cfg)
     params = _replicate_tree(params, max(dist.dp, 1))
+    if packed:
+        params = (PackedParams.pack(params, skip_leading=1) if layout is None
+                  else PackedParams.pack(params, layout))
     axes = jax.tree.map(lambda s: "," + s, axes)
     opt_state = optimizer.init(params)
     return {"params": params, "opt": opt_state}, axes
 
 
 def state_specs_of(dist: Distribution, state_shapes: PyTree,
-                   state_axes: PyTree) -> PyTree:
-    param_specs = dist.param_specs(state_shapes["params"], state_axes,
-                                   replica_axis=True)
+                   state_axes: PyTree, param_specs: PyTree = None) -> PyTree:
+    if param_specs is None:
+        param_specs = dist.param_specs(state_shapes["params"], state_axes,
+                                       replica_axis=True)
     opt_specs = {}
     for k, v in state_shapes["opt"].items():
         if k == "step":
@@ -106,6 +120,7 @@ def make_train_step_bundle(
     num_rotations: int = 2,
     gossip_mode: str = "static",
     gossip_fused: bool = False,
+    gossip_packed: bool = False,
     gossip_alpha: float = 0.5,
     mix_impl: Optional[Callable] = None,
     rotate_samples: Optional[bool] = None,
@@ -116,7 +131,16 @@ def make_train_step_bundle(
 ) -> TrainStepBundle:
     """Build the train step for (cfg, mesh, protocol). ``state_shapes`` /
     ``batch_shapes`` are ShapeDtypeStruct trees (e.g. from jax.eval_shape) so
-    nothing is materialized — the dry-run path."""
+    nothing is materialized — the dry-run path.
+
+    ``gossip_packed=True`` runs the bucketed persistent-buffer engine: params
+    and optimizer state live in LANE-aligned dtype-homogeneous buckets
+    (core.buckets) packed once at init; the forward reads through unpack
+    views, autodiff delivers gradients already packed, and the gossip mix is
+    one ppermute + in-place Pallas mix per bucket. Caveat: only ELEMENTWISE
+    optimizers (sgd, adamw) are packed-transparent — per-leaf-NORM updates
+    (lars) would compute their trust ratio over whole buckets instead of
+    layers; keep such optimizers on the per-leaf path."""
     mesh = dist.mesh
     if rotate_samples is None:
         rotate_samples = protocol == "gossip"
@@ -126,16 +150,46 @@ def make_train_step_bundle(
     batch_specs = jax.tree.map(
         lambda x: dist.replica_batch_spec(x.ndim), batch_shapes)
 
+    layout = None
+    if gossip_packed:
+        if not getattr(optimizer, "elementwise", True):
+            raise ValueError(
+                "gossip_packed requires an elementwise optimizer: this one "
+                "(e.g. lars) computes per-leaf norms, which would span whole "
+                "buckets instead of layers; use sgd/adamw or the per-leaf "
+                "gossip path")
+        _check_packable(mesh, param_specs)
+        layout = build_layout(state_shapes["params"], skip_leading=1)
+        packed_shapes = jax.eval_shape(
+            lambda t: PackedParams(layout.pack(t), layout),
+            state_shapes["params"])
+        opt_shapes = jax.eval_shape(optimizer.init, packed_shapes)
+        state_shapes = {"params": packed_shapes, "opt": opt_shapes}
+        param_specs = packed_param_specs(layout, dist.dp_axes)
+        state_specs = state_specs_of(dist, state_shapes, state_axes,
+                                     param_specs=param_specs)
+        if mix_impl is None:  # donation-friendly Pallas bucket mix
+            from repro.kernels import gossip_mix_bucket
+            mix_impl = gossip_mix_bucket
+
     proto = make_protocol(
         protocol, mesh, dist.dp_axes, param_specs,
         topology=topology, num_rotations=num_rotations, alpha=gossip_alpha,
-        mode=gossip_mode, fused=gossip_fused, mix_impl=mix_impl, seed=seed)
+        mode=gossip_mode, fused=gossip_fused, mix_impl=mix_impl,
+        packed_layout=layout, seed=seed)
 
     # per-layer remat happens inside the stack (blocks.stack_apply) — the
     # whole-loss checkpoint variant kept 130+GB of scan residuals alive.
     loss_fn = make_loss_fn(cfg, ssm_scan_impl=ssm_scan_impl, remat=remat,
                            remat_policy=remat_policy)
-    grad_fn = jax.vmap(jax.value_and_grad(loss_fn, has_aux=True))
+    if gossip_packed:
+        # loss over the buckets: unpack is slice+reshape views fused into the
+        # forward, and its autodiff transpose packs the gradients for free
+        def replica_loss(packed_one, batch_one):
+            return loss_fn(packed_one.unpack(), batch_one)
+        grad_fn = jax.vmap(jax.value_and_grad(replica_loss, has_aux=True))
+    else:
+        grad_fn = jax.vmap(jax.value_and_grad(loss_fn, has_aux=True))
 
     shuffle = None
     if rotate_samples and dist.dp > 1:
@@ -160,4 +214,24 @@ def make_train_step_bundle(
 
     return TrainStepBundle(
         step_fn=train_step, state_specs=state_specs, batch_specs=batch_specs,
-        protocol=proto, dist=dist, cfg=cfg, optimizer=optimizer)
+        protocol=proto, dist=dist, cfg=cfg, optimizer=optimizer,
+        layout=layout)
+
+
+def _check_packable(mesh, param_specs: PyTree) -> None:
+    """Packing flattens each replica, so every non-replica dim must be
+    effectively unsharded (axis absent or of size 1) — pure_dp / smoke."""
+    from jax.sharding import PartitionSpec
+    for spec in jax.tree.leaves(
+            param_specs, is_leaf=lambda x: isinstance(x, PartitionSpec)):
+        if not isinstance(spec, PartitionSpec):
+            continue
+        for dim in tuple(spec)[1:]:
+            axes = dim if isinstance(dim, tuple) else (dim,) if dim else ()
+            for ax in axes:
+                if mesh.shape[ax] != 1:
+                    raise ValueError(
+                        "gossip_packed requires params sharded only on the "
+                        f"replica axis, but a leaf uses mesh axis {ax!r} "
+                        f"(size {mesh.shape[ax]}); use dist_mode='pure_dp' "
+                        "or keep the per-leaf gossip path")

@@ -40,18 +40,30 @@ class Trainer:
             self._steps_cache[phase] = self.bundle.jitted(phase, donate=False)
         return self._steps_cache[phase]
 
+    def _drain(self, pending: List) -> None:
+        """Materialize queued device metrics into float history records.
+        The only host sync in the loop — called on log boundaries and at the
+        end of ``run``, never per step (a per-step ``float(v)`` blocks
+        dispatch and serializes compute with the host)."""
+        for step, metrics in pending:
+            rec = {k: float(v) for k, v in metrics.items()}
+            rec["step"] = step
+            self.history.append(rec)
+        pending.clear()
+
     def run(self, num_steps: int, start_step: int = 0) -> List[Dict[str, float]]:
         dp = max(self.bundle.dist.dp, 1)
         batch = jax.tree.map(
             jnp.asarray, make_replica_batches(self.dataset, start_step, dp))
         t0 = time.perf_counter()
+        pending: List = []  # (step, device-side metrics) not yet transferred
         for step in range(start_step, start_step + num_steps):
             fn = self._step_fn(step)
             self.state, rotated, metrics = fn(self.state, batch)
-            rec = {k: float(v) for k, v in metrics.items()}
-            rec["step"] = step
-            self.history.append(rec)
+            pending.append((step, metrics))
             if self.log_every and step % self.log_every == 0:
+                self._drain(pending)
+                rec = self.history[-1]
                 dt = time.perf_counter() - t0
                 self.log_fn(f"step {step:5d} loss {rec.get('loss', 0):.4f} "
                             f"ce {rec.get('ce', 0):.4f} ({dt:.1f}s)")
@@ -60,4 +72,5 @@ class Trainer:
             # shard rotation for the *next* step's content.
             batch = jax.tree.map(
                 jnp.asarray, make_replica_batches(self.dataset, step + 1, dp))
+        self._drain(pending)
         return self.history

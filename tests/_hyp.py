@@ -1,0 +1,77 @@
+"""Fixed-grid fallback for the tiny slice of the hypothesis API the tests
+use, so the suite still runs (with reduced example counts) on containers
+where hypothesis is not installed. Real hypothesis is preferred whenever
+importable — test modules fall back to this only on ImportError.
+"""
+from __future__ import annotations
+
+import itertools
+from types import SimpleNamespace
+
+MAX_COMBOS = 24  # cap the product grid so fallback sweeps stay fast
+
+
+class _Strategy:
+    def __init__(self, examples):
+        # dedupe, keep order
+        seen, out = set(), []
+        for e in examples:
+            k = (type(e).__name__, repr(e))
+            if k not in seen:
+                seen.add(k)
+                out.append(e)
+        self.examples = out
+
+    def filter(self, pred) -> "_Strategy":
+        return _Strategy([e for e in self.examples if pred(e)])
+
+    def map(self, fn) -> "_Strategy":
+        return _Strategy([fn(e) for e in self.examples])
+
+
+def _integers(lo: int, hi: int) -> _Strategy:
+    return _Strategy([lo, (lo + hi) // 2, hi])
+
+
+def _floats(lo: float, hi: float) -> _Strategy:
+    return _Strategy([lo, (lo + hi) / 2.0, hi])
+
+
+def _sampled_from(xs) -> _Strategy:
+    return _Strategy(list(xs))
+
+
+def _booleans() -> _Strategy:
+    return _Strategy([False, True])
+
+
+st = SimpleNamespace(integers=_integers, floats=_floats,
+                     sampled_from=_sampled_from, booleans=_booleans)
+
+
+def settings(*args, **kwargs):
+    """No-op stand-in for hypothesis.settings."""
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(*strategies):
+    """Run the test over a deterministic boundary/midpoint grid."""
+    combos = list(itertools.product(*[s.examples for s in strategies]))
+    if len(combos) > MAX_COMBOS:
+        stride = -(-len(combos) // MAX_COMBOS)
+        combos = combos[::stride]
+
+    def deco(fn):
+        def wrapper():
+            for combo in combos:
+                fn(*combo)
+        # no functools.wraps: copying __wrapped__ would make pytest see the
+        # original parameters and treat them as fixtures
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

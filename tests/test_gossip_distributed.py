@@ -12,6 +12,7 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import repro  # jax compat shims (AxisType / shard_map on older jax)
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
 from repro.core import (build_schedule, make_gossip_mix, gossip_mix_sim,
@@ -71,6 +72,7 @@ def test_shardmap_gossip_matches_simulator():
 _KERNEL_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import repro  # jax compat shims (AxisType / shard_map on older jax)
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
 from repro.core import build_schedule, make_gossip_mix, gossip_mix_sim

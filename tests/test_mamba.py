@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container lacks hypothesis: fixed-grid fallback
+    from _hyp import given, settings, st
 
 from repro.models.config import SSMSpec
 from repro.models.mamba import (mamba_apply, mamba_decode, mamba_init,

@@ -4,7 +4,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container lacks hypothesis: fixed-grid fallback
+    from _hyp import given, settings, st
 
 from repro.models.config import MoESpec
 from repro.models.layers import silu
