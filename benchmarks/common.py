@@ -13,7 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import build_schedule, make_sim_train_step, replicate
+from repro.core import (build_schedule, make_async_sim_train_step,
+                        make_sim_train_step, replicate)
 from repro.data import BigramTaskDataset
 from repro.models import lm_init, reduced
 from repro.optim import sgd
@@ -33,13 +34,19 @@ def tiny_lm_cfg(d_model=64, vocab=128):
 
 def make_replica_lm(p: int, protocol: str, *, lr=0.3, seed=0,
                     num_rotations=2, d_model=64, vocab=128):
+    """``gossip_async`` uses the staleness-1 step (core.simulate.
+    make_async_sim_train_step): step(opt_state, params, inbox, batch, t);
+    every other protocol keeps the 4-arg synchronous step."""
     cfg = tiny_lm_cfg(d_model, vocab)
     params, _ = lm_init(jax.random.key(seed), cfg)
     loss_fn_full = make_loss_fn(cfg)
     loss_fn = lambda prms, batch: loss_fn_full(prms, batch)[0]
     sched = build_schedule(max(p, 2), num_rotations=num_rotations, seed=seed)
     opt = sgd(lr, momentum=0.9)
-    step = make_sim_train_step(loss_fn, opt, sched, protocol=protocol)
+    if protocol == "gossip_async":
+        step = make_async_sim_train_step(loss_fn, opt, sched)
+    else:
+        step = make_sim_train_step(loss_fn, opt, sched, protocol=protocol)
     params = replicate(params, p)
     opt_state = opt.init(params)
     return cfg, step, params, opt_state, sched
@@ -54,6 +61,8 @@ def run_replica_lm(p: int, protocol: str, steps: int, *, seq_len=32,
     cfg, step, params, opt_state, sched = make_replica_lm(
         p, protocol, lr=lr, seed=seed)
     task = BigramTaskDataset(cfg.vocab, seed=seed + 991)
+    is_async = protocol == "gossip_async"
+    inbox = jax.tree.map(jnp.copy, params) if is_async else None
 
     def batch_for(t):
         toks = np.stack([
@@ -63,18 +72,23 @@ def run_replica_lm(p: int, protocol: str, steps: int, *, seq_len=32,
             for r in range(p)])
         return {"tokens": jnp.asarray(toks)}
 
+    def one(t, opt_state, params, inbox):
+        if is_async:
+            opt_state, params, inbox, m = step(opt_state, params, inbox,
+                                               batch_for(t), jnp.int32(t))
+        else:
+            opt_state, params, m = step(opt_state, params, batch_for(t),
+                                        jnp.int32(t))
+        return opt_state, params, inbox, m
+
     hist = []
     # warm up compile outside the timed region
-    b0 = batch_for(0)
-    opt_state, params, m = step(opt_state, params, b0, jnp.int32(0))
+    opt_state, params, inbox, m = one(0, opt_state, params, inbox)
     jax.block_until_ready(m["loss"])
     t0 = time.perf_counter()
-    t_done = 1
     for t in range(1, steps):
-        opt_state, params, m = step(opt_state, params, batch_for(t),
-                                    jnp.int32(t))
+        opt_state, params, inbox, m = one(t, opt_state, params, inbox)
         hist.append({k: float(v) for k, v in m.items()} | {"step": t})
-        t_done = t
         if time_budget_s and time.perf_counter() - t0 > time_budget_s:
             break
     jax.block_until_ready(jax.tree.leaves(params)[0])

@@ -32,13 +32,15 @@ def _mix(a, b):
     return (a * (1.0 - ALPHA) + b * ALPHA).astype(a.dtype)
 
 
-def gossip_engine_rows():
+def gossip_engine_rows(smoke: bool = False):
     """Per-mix-step cost of the three gossip packings on the stablelm-1.6b
     LEAF STRUCTURE (all 24 layers) at laptop width. The mix arithmetic is
     identical jnp in all three, so the measurement isolates the packing
     strategy: per-leaf = n_leaves launches, old fused = concat + fp32 casts +
     split EVERY step, packed = pre-packed dtype-native buckets, mix only."""
-    cfg = reduced(get_config("stablelm-1.6b"), n_layers=24, d_model=128)
+    iters = 4 if smoke else 20
+    cfg = reduced(get_config("stablelm-1.6b"),
+                  n_layers=8 if smoke else 24, d_model=128)
     params, _ = lm_init(jax.random.key(0), cfg)
     partner = jax.tree.map(lambda x: x + jnp.asarray(0.01, x.dtype), params)
     n_leaves = len(jax.tree.leaves(params))
@@ -75,14 +77,16 @@ def gossip_engine_rows():
     bkts_b = layout.pack(partner)
     packed_fn = jax.jit(lambda A, B: tuple(_mix(a, b) for a, b in zip(A, B)))
 
-    t_leaf = timed_us(lambda: leaf_fn(params, partner), iters=20)
-    t_fused = timed_us(lambda: fused_fn(params, bflat), iters=20)
-    t_packed = timed_us(lambda: packed_fn(bkts_a, bkts_b), iters=20)
+    t_leaf = timed_us(lambda: leaf_fn(params, partner), iters=iters)
+    t_fused = timed_us(lambda: fused_fn(params, bflat), iters=iters)
+    t_packed = timed_us(lambda: packed_fn(bkts_a, bkts_b), iters=iters)
 
     summ = layout.summary()
     record = {
         "arch": cfg.name,
-        "structure": "24-layer stablelm-1.6b leaf tree @ d_model=128",
+        "smoke": smoke,
+        "structure": f"{cfg.n_layers}-layer stablelm-1.6b leaf tree "
+                     "@ d_model=128",
         "n_leaves": n_leaves,
         "n_buckets": summ["num_buckets"],
         "exact_bytes": summ["exact_bytes"],
@@ -106,18 +110,22 @@ def gossip_engine_rows():
     ]
 
 
-def rows():
+def rows(smoke: bool = False):
     out = []
+    iters = 2 if smoke else 5
     key = jax.random.key(0)
-    a = jax.random.normal(key, (1 << 20,))
-    b = jax.random.normal(jax.random.fold_in(key, 1), (1 << 20,))
+    n = 1 << (18 if smoke else 20)
+    a = jax.random.normal(key, (n,))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (n,))
     out.append(("kernel_gossip_mix_1M_interp",
-                timed_us(lambda: gossip_mix_flat(a, b), iters=5),
+                timed_us(lambda: gossip_mix_flat(a, b), iters=iters),
                 "interpret=True"))
     out.append(("kernel_gossip_mix_1M_ref",
-                timed_us(lambda: jax.jit(gossip_mix_ref)(a, b), iters=5),
+                timed_us(lambda: jax.jit(gossip_mix_ref)(a, b), iters=iters),
                 "jnp"))
-    out.extend(gossip_engine_rows())
+    out.extend(gossip_engine_rows(smoke=smoke))
+    if smoke:
+        return out
     dA = jax.random.uniform(key, (1, 256, 64, 8), minval=.5, maxval=1.)
     dBx = jax.random.normal(jax.random.fold_in(key, 2), (1, 256, 64, 8))
     out.append(("kernel_ssm_scan_interp",

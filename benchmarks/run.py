@@ -11,9 +11,13 @@ suite). Figure/table mapping:
     fig16_loss_vs_time — Fig 16: loss after a fixed wall-time budget
     fig17_every_logp   — Fig 17: gossip vs every-log(p) all-reduce
     kernels_bench      — Pallas kernel plumbing micro-bench
+    async_bench        — §5 async gossip: sync vs staleness-1 step time
     ablation_robustness— beyond-paper: grad-vs-model gossip, dropped exchanges
+
+``--smoke`` shrinks iteration counts for CI (suites that accept it).
 """
 import argparse
+import inspect
 import sys
 import traceback
 
@@ -25,6 +29,7 @@ SUITES = [
     "fig16_loss_vs_time",
     "fig17_every_logp",
     "kernels_bench",
+    "async_bench",
     "ablation_robustness",
 ]
 
@@ -32,6 +37,8 @@ SUITES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced iteration counts (CI perf-trajectory run)")
     args = ap.parse_args()
     failed = []
     print("name,us_per_call,derived")
@@ -41,7 +48,10 @@ def main() -> None:
         print(f"# suite: {name}", flush=True)
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["rows"])
-            for row_name, us, derived in mod.rows():
+            kwargs = {}
+            if args.smoke and "smoke" in inspect.signature(mod.rows).parameters:
+                kwargs["smoke"] = True
+            for row_name, us, derived in mod.rows(**kwargs):
                 print(f"{row_name},{us:.2f},{derived}", flush=True)
         except Exception:
             traceback.print_exc()

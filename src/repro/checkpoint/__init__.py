@@ -1,1 +1,1 @@
-from .io import restore_state, save_state
+from .io import checkpoint_exists, read_manifest, restore_state, save_state

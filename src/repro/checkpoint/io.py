@@ -11,6 +11,14 @@ layer: save unpacks every PackedParams node to its named leaf tree before
 writing, and restore re-packs after reading. The on-disk format is therefore
 identical between the packed and per-leaf engines — a packed run can restore
 a leaf checkpoint and vice versa.
+
+Asynchronous gossip state: the staleness-1 inbox (``state["inbox"]``, same
+structure as the params — PackedParams included) is just another state
+subtree, so it persists and re-packs through the same machinery; together
+with the step counter in the manifest (from which the gossip phase resumes:
+``phase = step % schedule.period``) an async run restores to the exact
+point in the exchange pipeline it left off — resumption is bit-deterministic
+(tests/test_async_gossip.py).
 """
 from __future__ import annotations
 
@@ -25,7 +33,7 @@ from repro.core.buckets import PackedParams
 
 PyTree = Any
 
-__all__ = ["save_state", "restore_state"]
+__all__ = ["save_state", "restore_state", "checkpoint_exists", "read_manifest"]
 
 
 def _is_packed(x) -> bool:
@@ -63,6 +71,19 @@ def _flatten(tree: PyTree):
         key = jax.tree_util.keystr(path)
         keyed[key] = leaf
     return keyed, treedef
+
+
+def checkpoint_exists(path: str) -> bool:
+    """True when ``path`` holds a complete checkpoint (manifest + arrays)."""
+    return (os.path.isfile(os.path.join(path, "manifest.json"))
+            and os.path.isfile(os.path.join(path, "arrays.npz")))
+
+
+def read_manifest(path: str) -> Dict:
+    """Manifest only (step / metadata / keys) — no array loading. Lets a
+    launcher decide resume step and validate protocol metadata cheaply."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)
 
 
 def save_state(path: str, state: PyTree, metadata: Optional[Dict] = None,

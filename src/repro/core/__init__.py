@@ -8,8 +8,10 @@ from .buckets import (BucketLayout, LeafSlot, PackedParams, build_layout,
                       packed_param_specs)
 from .gossip import (gossip_bytes_per_step, linear_pairs, make_gossip_mix,
                      make_packed_gossip_mix)
+from .async_gossip import make_async_gossip_mix, make_packed_async_gossip_mix
 from .protocols import PROTOCOLS, Protocol, make_protocol
 from .shuffle import RingShardRotation, make_ring_shuffle
 from .simulate import (allreduce_mean_sim, gossip_mix_sim,
-                       gossip_mix_sim_masked, make_sim_train_step,
+                       gossip_mix_sim_delayed, gossip_mix_sim_masked,
+                       make_async_sim_train_step, make_sim_train_step,
                        replica_variance, replicate)

@@ -1,0 +1,152 @@
+"""Asynchronous gossip runtime: staleness-1 inbox protocol (GossipGraD §5).
+
+The paper's headline asynchrony is that the gossip exchange never sits on the
+critical path: each rank posts non-blocking sends of its model and keeps
+training, consuming whatever the partner sent *last* step. On a TPU mesh the
+same structure maps onto a persistent **inbox** carried in the train state:
+
+    state entering step t:  (params u_{t-1},  inbox B_{t-1})
+    1. mixed = (1-alpha) * u_{t-1} + alpha * B_{t-1}     (arrival mix)
+    2. B_t   = ppermute(mixed, schedule row t)           (dispatch, async)
+    3. grads / optimizer update at ``mixed``  ->  u_t    (compute)
+
+The ppermute's result is consumed only as the *next* step's inbox, so nothing
+between the dispatch (2) and the end of the step depends on it: XLA emits a
+``collective-permute-start`` right after the mix and hoists the entire
+forward/backward/update between start and done — the wire transfer of step
+t's exchange overlaps step t's own compute, which in the unrolled timeline is
+the compute that *follows* the previous optimizer update. Communication cost
+on the critical path per step: one mix (pure FLOPs), zero exposed transfers.
+
+Staleness is exactly 1: the inbox holds the partner's fully-mixed params from
+one step earlier (the partner's latest local update is the only thing
+missing). The exchange *pattern* at step t is the same schedule row t the
+synchronous protocol uses — consumption is simply one step late — so
+rotation, dissemination/hypercube diffusion, and the paper's mixing analysis
+carry over unchanged. The delayed-mix oracle ``core.simulate.
+gossip_mix_sim_delayed`` defines the reference semantics; the shard_map
+implementation here must match it bit-exactly (tests/test_async_gossip.py).
+
+Bootstrap: a fresh run starts with ``inbox = copy(params)`` ("nothing
+received yet"), making step 0's arrival mix the identity and step 0's
+dispatch the first real exchange. Checkpoints persist the inbox (and the
+phase via the step counter), so resumed runs replay the identical sequence.
+
+Like the synchronous engine, two phase-selection modes exist: ``static``
+(one compiled step per schedule row — the production shape) and ``dynamic``
+(``lax.switch`` over all rows with a traced step index).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .buckets import BucketLayout, packed_param_specs
+from .gossip import linear_pairs
+from .topology import GossipSchedule
+
+PyTree = Any
+
+__all__ = ["make_async_gossip_mix", "make_packed_async_gossip_mix"]
+
+
+def make_async_gossip_mix(
+    mesh: Mesh,
+    axis_names: Sequence[str],
+    schedule: GossipSchedule,
+    param_specs: PyTree,
+    *,
+    alpha: float = 0.5,
+    mode: str = "static",
+    mix_impl: Callable | None = None,
+) -> Callable[[PyTree, PyTree, Any], Tuple[PyTree, PyTree]]:
+    """Build ``mix(params, inbox, phase) -> (mixed, new_inbox)``.
+
+    ``params`` and ``inbox`` share the same structure and sharding (leading
+    replica axis over ``axis_names``). At phase t the arrival mix consumes
+    the inbox and the outgoing ppermute is issued with schedule row t; its
+    result is only returned as state, so the transfer overlaps whatever
+    compute the caller schedules after the mix (the whole fwd/bwd in the
+    train step). ``mix_impl(local, received, alpha)`` swaps in the Pallas
+    bucket kernel on the packed path.
+    """
+    axis_names = tuple(axis_names)
+    dp = int(np.prod([mesh.shape[a] for a in axis_names]))
+    if schedule.p != dp:
+        raise ValueError(
+            f"schedule built for p={schedule.p} but mesh axes {axis_names} "
+            f"give dp={dp}")
+    all_pairs = [linear_pairs(schedule, t) for t in range(schedule.period)]
+
+    def mix_leaf(x: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+        if mix_impl is not None:
+            return mix_impl(x, b, alpha)
+        return x * (1.0 - alpha) + b * alpha
+
+    def local_async(pairs, params, inbox):
+        mixed = jax.tree.map(mix_leaf, params, inbox)
+        new_inbox = jax.tree.map(
+            lambda m: jax.lax.ppermute(m, axis_names, pairs), mixed)
+        return mixed, new_inbox
+
+    in_specs = (param_specs, param_specs)
+    out_specs = (param_specs, param_specs)
+
+    if mode == "static":
+        mixers = [
+            jax.shard_map(functools.partial(local_async, pairs), mesh=mesh,
+                          in_specs=in_specs, out_specs=out_specs,
+                          check_vma=False)
+            for pairs in all_pairs
+        ]
+
+        def mix(params: PyTree, inbox: PyTree, phase: int):
+            return mixers[int(phase) % schedule.period](params, inbox)
+
+        return mix
+
+    if mode == "dynamic":
+        def body(params: PyTree, inbox: PyTree, phase: jnp.ndarray):
+            branches = [functools.partial(local_async, pairs)
+                        for pairs in all_pairs]
+            return jax.lax.switch(phase % schedule.period, branches,
+                                  params, inbox)
+
+        inner = jax.shard_map(
+            body, mesh=mesh, in_specs=in_specs + (P(),), out_specs=out_specs,
+            check_vma=False)
+
+        def mix(params: PyTree, inbox: PyTree, phase):
+            return inner(params, inbox, jnp.asarray(phase, jnp.int32))
+
+        return mix
+
+    raise ValueError(f"unknown gossip mode {mode!r}")
+
+
+def make_packed_async_gossip_mix(
+    mesh: Mesh,
+    axis_names: Sequence[str],
+    schedule: GossipSchedule,
+    layout: BucketLayout,
+    *,
+    alpha: float = 0.5,
+    mode: str = "static",
+    mix_impl: Callable | None = None,
+) -> Callable[[PyTree, PyTree, Any], Tuple[PyTree, PyTree]]:
+    """Async mix over persistent gossip buckets (core.buckets.PackedParams).
+
+    Both the live params and the inbox are PackedParams over the same
+    layout: the inbox is literally last step's wire buffers, kept resident.
+    Each step issues one ppermute + one (donatable, in-place) mix per bucket;
+    the same sharding restriction as the sync packed engine applies (replica
+    axis only — pure_dp / smoke meshes).
+    """
+    specs = packed_param_specs(layout, tuple(axis_names))
+    return make_async_gossip_mix(mesh, axis_names, schedule, specs,
+                                 alpha=alpha, mode=mode, mix_impl=mix_impl)

@@ -6,19 +6,29 @@ optimizer-state leaf carries a leading replica axis of size ``dp`` sharded
 over the data-parallel mesh axes (``dp == 1`` means a single logical replica
 and every protocol degenerates to local SGD over that axis).
 
-    gossip      local update, then pairwise-average params with the step's
-                dissemination partner (THE paper's algorithm, §4).
-    agd         gradients mean-reduced across replicas every step — the
-                paper's all-reduce baseline with layer-wise async overlap
-                (S-Caffe / PowerAI / Caffe2 style, §3.1/§7.1).
-    every_logp  params all-reduce-averaged every ceil(log2 dp) steps, local
-                updates in between (§7.5's amortized-O(1) alternative).
-    none        no communication — the rejected ensemble extreme (§4.1).
+    gossip        local update, then pairwise-average params with the step's
+                  dissemination partner (THE paper's algorithm, §4).
+    gossip_async  staleness-1 inbox protocol (§5): the arrival mix consumes
+                  partner params received during the *previous* step and the
+                  outgoing ppermute is dispatched immediately, so the wire
+                  transfer overlaps the next forward/backward
+                  (core.async_gossip).
+    agd           gradients mean-reduced across replicas every step — the
+                  paper's all-reduce baseline with layer-wise async overlap
+                  (S-Caffe / PowerAI / Caffe2 style, §3.1/§7.1).
+    every_logp    params all-reduce-averaged every ceil(log2 dp) steps, local
+                  updates in between (§7.5's amortized-O(1) alternative).
+    none          no communication — the rejected ensemble extreme (§4.1).
 
 All protocols expose the same two hooks so the train step is protocol-neutral:
 
     grads  = proto.comm_grads(grads, phase)     # before optimizer.update
     params = proto.comm_params(params, phase)   # after optimizer.update
+
+``gossip_async`` carries per-step state: when ``proto.carries_inbox``, the
+train step calls ``comm_params(params, phase, inbox=inbox)`` *before* the
+forward pass (the arrival mix + re-dispatch) and gets ``(mixed, new_inbox)``
+back; the new inbox rides in the train state and is checkpointed with it.
 """
 from __future__ import annotations
 
@@ -30,13 +40,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .async_gossip import make_async_gossip_mix, make_packed_async_gossip_mix
 from .buckets import BucketLayout
 from .gossip import make_gossip_mix, make_packed_gossip_mix
 from .topology import GossipSchedule, build_schedule
 
 PyTree = Any
 
-PROTOCOLS = ("gossip", "agd", "every_logp", "none")
+PROTOCOLS = ("gossip", "gossip_async", "agd", "every_logp", "none")
 
 __all__ = ["Protocol", "make_protocol", "PROTOCOLS"]
 
@@ -53,19 +64,42 @@ class Protocol:
     name: str
     dp: int
     schedule: Optional[GossipSchedule]
-    _mix: Optional[Callable]  # gossip only
+    _mix: Optional[Callable]  # gossip / gossip_async only
     dynamic: bool = False
 
     @property
     def period(self) -> int:
         return self.schedule.period if self.schedule is not None else 1
 
+    @property
+    def carries_inbox(self) -> bool:
+        """True when the train state must carry the staleness-1 inbox (and
+        ``comm_params`` takes/returns it)."""
+        return self.name == "gossip_async" and self.dp > 1
+
+    @property
+    def staleness(self) -> int:
+        """Steps between a param snapshot leaving a rank and being mixed in
+        by its partner: 0 for synchronous protocols, 1 for gossip_async.
+        Sizes the trainer's in-flight dispatch window."""
+        return 1 if self.carries_inbox else 0
+
     def comm_grads(self, grads: PyTree, phase) -> PyTree:
         if self.name == "agd" and self.dp > 1:
             return _replica_mean(grads)
         return grads
 
-    def comm_params(self, params: PyTree, phase) -> PyTree:
+    def comm_params(self, params: PyTree, phase, inbox: PyTree = None):
+        """Synchronous protocols: ``comm_params(params, phase) -> params``
+        after the optimizer update. ``gossip_async`` (dp > 1):
+        ``comm_params(params, phase, inbox) -> (mixed, new_inbox)`` *before*
+        the forward pass — the arrival mix plus the pipelined re-dispatch."""
+        if self.carries_inbox:
+            if inbox is None:
+                raise ValueError(
+                    "gossip_async needs the inbox: comm_params(params, "
+                    "phase, inbox) — the train state must carry it")
+            return self._mix(params, inbox, phase)
         if self.dp <= 1:
             return params
         if self.name == "gossip":
@@ -78,6 +112,13 @@ class Protocol:
                     _replica_mean, lambda t: t, params)
             return _replica_mean(params) if (int(phase) + 1) % sub == 0 else params
         return params
+
+    def init_inbox(self, params: PyTree) -> PyTree:
+        """Fresh-run staleness-1 bootstrap: an inbox equal to the local
+        params ("nothing received yet"), so step 0's arrival mix is the
+        identity and step 0's dispatch is the first real exchange. A copy,
+        not an alias — the packed engine donates state buffers in place."""
+        return jax.tree.map(jnp.copy, params)
 
 
 def make_protocol(
@@ -109,7 +150,7 @@ def make_protocol(
     dp = int(np.prod([mesh.shape[a] for a in data_axes])) if data_axes else 1
     schedule = None
     mix = None
-    if dp > 1 and name in ("gossip", "every_logp"):
+    if dp > 1 and name in ("gossip", "gossip_async", "every_logp"):
         schedule = build_schedule(dp, topology=topology,
                                   num_rotations=num_rotations, seed=seed)
     if dp > 1 and name == "gossip":
@@ -121,5 +162,14 @@ def make_protocol(
             mix = make_gossip_mix(mesh, data_axes, schedule, param_specs,
                                   alpha=alpha, mode=mode, fused=fused,
                                   mix_impl=mix_impl)
+    if dp > 1 and name == "gossip_async":
+        if packed_layout is not None:
+            mix = make_packed_async_gossip_mix(
+                mesh, data_axes, schedule, packed_layout, alpha=alpha,
+                mode=mode, mix_impl=mix_impl)
+        else:
+            mix = make_async_gossip_mix(mesh, data_axes, schedule,
+                                        param_specs, alpha=alpha, mode=mode,
+                                        mix_impl=mix_impl)
     return Protocol(name=name, dp=dp, schedule=schedule, _mix=mix,
                     dynamic=(mode == "dynamic"))

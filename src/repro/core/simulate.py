@@ -32,9 +32,11 @@ PyTree = Any
 __all__ = [
     "replicate",
     "gossip_mix_sim",
+    "gossip_mix_sim_delayed",
     "allreduce_mean_sim",
     "replica_variance",
     "make_sim_train_step",
+    "make_async_sim_train_step",
 ]
 
 
@@ -46,6 +48,30 @@ def replicate(params: PyTree, p: int) -> PyTree:
 def gossip_mix_sim(params: PyTree, recv_from: jnp.ndarray) -> PyTree:
     """w_j <- (w_j + w_{recv_from[j]}) / 2 over the leading replica axis."""
     return jax.tree.map(lambda x: (x + x[recv_from]) * 0.5, params)
+
+
+def gossip_mix_sim_delayed(params: PyTree, inbox: PyTree,
+                           recv_from: jnp.ndarray, alpha: float = 0.5
+                           ) -> Tuple[PyTree, PyTree]:
+    """Delayed-mix oracle for the staleness-1 async protocol (§5).
+
+    One async step at schedule row ``recv_from``: the arrival mix consumes
+    the inbox (data exchanged one step earlier), then the outgoing exchange
+    of the freshly mixed params is performed eagerly — in the distributed
+    implementation (core.async_gossip) that ppermute is in flight during the
+    next step's compute and lands as its inbox.
+
+        mixed_j     = (1-alpha) * params_j + alpha * inbox_j
+        new_inbox_j = mixed_{recv_from[j]}
+
+    A fresh run bootstraps with ``inbox = params`` ("nothing received yet"),
+    making the first arrival mix the identity. The shard_map implementation
+    must match this function bit-exactly (tests/test_async_gossip.py).
+    """
+    mixed = jax.tree.map(lambda x, b: x * (1.0 - alpha) + b * alpha,
+                         params, inbox)
+    new_inbox = jax.tree.map(lambda m: m[recv_from], mixed)
+    return mixed, new_inbox
 
 
 def allreduce_mean_sim(params: PyTree) -> PyTree:
@@ -152,5 +178,46 @@ def make_sim_train_step(
             "replica_variance": replica_variance(params),
         }
         return opt_state, params, metrics
+
+    return step
+
+
+def make_async_sim_train_step(
+    loss_fn: Callable[[PyTree, Any], jnp.ndarray],
+    optimizer,
+    schedule: GossipSchedule,
+    alpha: float = 0.5,
+) -> Callable:
+    """Jitted p-replica simulated train step for the staleness-1 async
+    protocol — the laptop-scale twin of the ``gossip_async`` train step.
+
+    Mirrors the distributed program structure exactly (arrival mix first,
+    then compute), so given the same batches it produces the same loss
+    sequence as the sharded trainer:
+
+        step(opt_state, params, inbox, batch_rep, step_idx)
+            -> (opt_state, params, inbox, metrics)
+
+    Start with ``inbox = jax.tree.map(jnp.copy, params)`` (the staleness-1
+    bootstrap: nothing received yet, first arrival mix is the identity).
+    ``metrics['replica_variance']`` is measured at the mixed params — the
+    model drift the paper's diffusion argument keeps bounded.
+    """
+    perm_table = jnp.asarray(
+        np.stack([schedule.recv_from(t) for t in range(schedule.period)])
+    )
+    grad_fn = jax.vmap(jax.value_and_grad(loss_fn))
+
+    @jax.jit
+    def step(opt_state, params, inbox, batch, step_idx):
+        recv = perm_table[step_idx % schedule.period]
+        mixed, new_inbox = gossip_mix_sim_delayed(params, inbox, recv, alpha)
+        losses, grads = grad_fn(mixed, batch)
+        new_params, opt_state = optimizer.update(mixed, grads, opt_state)
+        metrics = {
+            "loss": losses.mean(),
+            "replica_variance": replica_variance(mixed),
+        }
+        return opt_state, new_params, new_inbox, metrics
 
     return step

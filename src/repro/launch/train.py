@@ -18,7 +18,8 @@ import os
 import jax
 import numpy as np
 
-from repro.checkpoint import save_state
+from repro.checkpoint import (checkpoint_exists, read_manifest, restore_state,
+                              save_state)
 from repro.configs import get_config, list_archs
 from repro.data import ShardedTokenDataset
 from repro.launch.mesh import make_production_mesh, make_smoke_mesh
@@ -33,7 +34,8 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen3-0.6b", choices=list_archs())
     ap.add_argument("--protocol", default="gossip",
-                    choices=["gossip", "agd", "every_logp", "none"])
+                    choices=["gossip", "gossip_async", "agd", "every_logp",
+                             "none"])
     ap.add_argument("--topology", default="dissemination",
                     choices=["dissemination", "hypercube"])
     ap.add_argument("--steps", type=int, default=50)
@@ -50,6 +52,10 @@ def main() -> None:
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--d-model", type=int, default=128)
     ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--resume", action="store_true",
+                    help="restore from --checkpoint (if it exists) and "
+                    "continue from its saved step; async runs resume their "
+                    "staleness-1 inbox and gossip phase deterministically")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
 
@@ -78,20 +84,36 @@ def main() -> None:
         gossip_packed=args.packed,
         remat=not (args.smoke or len(jax.devices()) == 1))
     state, _ = init_train_state(jax.random.key(0), cfg, dist, opt,
-                                packed=args.packed, layout=bundle.layout)
+                                packed=args.packed, layout=bundle.layout,
+                                inbox=bundle.protocol.carries_inbox)
+
+    start_step = 0
+    if args.resume and args.checkpoint and checkpoint_exists(args.checkpoint):
+        meta = read_manifest(args.checkpoint).get("metadata", {})
+        if meta.get("protocol") not in (None, args.protocol):
+            raise SystemExit(
+                f"checkpoint was written by protocol {meta['protocol']!r}; "
+                f"refusing to resume it as {args.protocol!r}")
+        state, manifest = restore_state(args.checkpoint, state)
+        start_step = int(manifest.get("step") or 0)
+        print(f"resumed {args.checkpoint} at step {start_step} "
+              f"(phase {start_step % max(bundle.protocol.period, 1)})")
 
     ds = ShardedTokenDataset(cfg.vocab, args.seq_len,
                              n_shards=max(dist.dp, 1),
                              batch_per_shard=args.global_batch // max(dist.dp, 1))
     trainer = Trainer(bundle, state, ds, log_every=args.log_every)
-    hist = trainer.run(args.steps)
+    hist = trainer.run(args.steps, start_step=start_step)
     print(json.dumps({"arch": cfg.name, "protocol": args.protocol,
                       "final_loss": hist[-1]["loss"],
-                      "first_loss": hist[0]["loss"]}))
+                      "first_loss": hist[0]["loss"],
+                      "start_step": start_step}))
     if args.checkpoint:
+        end_step = start_step + args.steps
         save_state(args.checkpoint, trainer.state,
-                   metadata={"arch": cfg.name, "protocol": args.protocol},
-                   step=args.steps)
+                   metadata={"arch": cfg.name, "protocol": args.protocol,
+                             "phase": end_step % max(bundle.protocol.period, 1)},
+                   step=end_step)
         print(f"checkpoint -> {args.checkpoint}")
 
 

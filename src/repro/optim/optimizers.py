@@ -26,8 +26,13 @@ class Optimizer:
     # True when update is purely elementwise per leaf — such optimizers are
     # transparent to the bucketed gossip engine (core.buckets), which fuses
     # many layers into one flat leaf. Norm-based per-leaf updates (lars) set
-    # False and must stay on the per-leaf path.
+    # False.
     elementwise: bool = True
+    # Non-elementwise optimizers that nevertheless handle PackedParams
+    # states correctly — by reading per-leaf norms through the
+    # ``PackedParams.unpack()`` view — set True to run under the bucketed
+    # gossip engine anyway.
+    packed_aware: bool = False
 
 
 def sgd(schedule: Schedule | float, momentum: float = 0.9,
@@ -64,7 +69,14 @@ def lars(schedule: Schedule | float, momentum: float = 0.9,
          eps: float = 1e-9) -> Optimizer:
     """Layer-wise Adaptive Rate Scaling [You et al., the paper's §8 pointer
     for large-batch hyperparameter scaling]: per-leaf LR is scaled by
-    trust_coef * ||w|| / (||g|| + wd*||w||)."""
+    trust_coef * ||w|| / (||g|| + wd*||w||).
+
+    Packed-aware: when the state is a core.buckets.PackedParams (bucketed
+    gossip engine), the update reads per-LAYER norms through the
+    ``unpack()`` slice views — the trust ratio never spans a bucket — and
+    re-packs the results. The re-pack is one concatenate per bucket per
+    step, a cost elementwise optimizers don't pay; it buys lars the packed
+    engine's one-collective-per-bucket gossip path."""
     sched = constant(schedule) if isinstance(schedule, (int, float)) else schedule
 
     def init(params):
@@ -73,6 +85,7 @@ def lars(schedule: Schedule | float, momentum: float = 0.9,
                                     params)}
 
     def update(params, grads, state):
+        from repro.core.buckets import PackedParams
         lr = sched(state["step"])
 
         def upd(p, g, m):
@@ -88,14 +101,24 @@ def lars(schedule: Schedule | float, momentum: float = 0.9,
             m = momentum * m + gf * trust
             return (pf - lr * m).astype(p.dtype), m
 
-        out = jax.tree.map(upd, params, grads, state["mom"])
+        packed = isinstance(params, PackedParams)
+        if packed:
+            layout = params.layout
+            params, grads = params.unpack(), grads.unpack()
+            mom = state["mom"].unpack()
+        else:
+            mom = state["mom"]
+        out = jax.tree.map(upd, params, grads, mom)
         new_params = jax.tree.map(lambda o: o[0], out,
                                   is_leaf=lambda x: isinstance(x, tuple))
         new_mom = jax.tree.map(lambda o: o[1], out,
                                is_leaf=lambda x: isinstance(x, tuple))
+        if packed:
+            new_params = PackedParams(layout.pack(new_params), layout)
+            new_mom = PackedParams(layout.pack(new_mom), layout)
         return new_params, {"step": state["step"] + 1, "mom": new_mom}
 
-    return Optimizer(init, update, elementwise=False)
+    return Optimizer(init, update, elementwise=False, packed_aware=True)
 
 
 def adamw(schedule: Schedule | float, b1: float = 0.9, b2: float = 0.95,

@@ -15,6 +15,12 @@ Step layout (mirrors GossipGraD Fig. 8/9):
     4. protocol.comm_params     — gossip ppermute + average  (comm, overlapped)
     5. ring-rotate the *next* batch shards (§4.5.2 shuffle)  (comm, overlapped)
 
+``gossip_async`` (§5, core.async_gossip) reorders this: the train state
+carries a staleness-1 **inbox** (partner params received last step), the
+arrival mix + outgoing ppermute run *before* step (1), and the transfer's
+result is only needed as the next step's inbox — so XLA overlaps the wire
+with the whole forward/backward instead of exposing it after the update.
+
 ``phase`` (the gossip schedule position) is STATIC by default: the launcher
 keeps ``schedule.period`` compiled variants — see core/gossip.py for the
 rationale and the dynamic lax.switch alternative.
@@ -71,7 +77,7 @@ def _replicate_tree(tree: PyTree, dp: int) -> PyTree:
 
 def init_train_state(key, cfg: ModelConfig, dist: Distribution,
                      optimizer: Optimizer, *, packed: bool = False,
-                     layout=None):
+                     layout=None, inbox: bool = False):
     """(state, state_axes): state = {"params","opt"}, leaves carry a leading
     replica axis of size dist.dp (1 in single-pod fsdp mode).
 
@@ -80,7 +86,11 @@ def init_train_state(key, cfg: ModelConfig, dist: Distribution,
     engine. Pass the bundle's ``layout`` so state and step agree. The
     returned ``state_axes`` always annotate the UNPACKED leaf tree (packed
     state derives its specs from the layout via packed_param_specs, not from
-    axes)."""
+    axes).
+
+    ``inbox=True`` (gossip_async with dp > 1, i.e. the bundle's
+    ``protocol.carries_inbox``) adds the staleness-1 inbox bootstrap: a copy
+    of the params, so step 0's arrival mix is the identity."""
     params, axes = lm_init(key, cfg)
     params = _replicate_tree(params, max(dist.dp, 1))
     if packed:
@@ -88,7 +98,10 @@ def init_train_state(key, cfg: ModelConfig, dist: Distribution,
                   else PackedParams.pack(params, layout))
     axes = jax.tree.map(lambda s: "," + s, axes)
     opt_state = optimizer.init(params)
-    return {"params": params, "opt": opt_state}, axes
+    state = {"params": params, "opt": opt_state}
+    if inbox:
+        state["inbox"] = jax.tree.map(jnp.copy, params)
+    return state, axes
 
 
 def state_specs_of(dist: Distribution, state_shapes: PyTree,
@@ -137,13 +150,13 @@ def make_train_step_bundle(
     and optimizer state live in LANE-aligned dtype-homogeneous buckets
     (core.buckets) packed once at init; the forward reads through unpack
     views, autodiff delivers gradients already packed, and the gossip mix is
-    one ppermute + in-place Pallas mix per bucket. Caveat: only ELEMENTWISE
-    optimizers (sgd, adamw) are packed-transparent — per-leaf-NORM updates
-    (lars) would compute their trust ratio over whole buckets instead of
-    layers; keep such optimizers on the per-leaf path."""
+    one ppermute + in-place Pallas mix per bucket. ELEMENTWISE optimizers
+    (sgd, adamw) are packed-transparent; norm-based optimizers must declare
+    ``packed_aware`` and read their per-leaf norms through the
+    ``PackedParams.unpack()`` view (lars does)."""
     mesh = dist.mesh
     if rotate_samples is None:
-        rotate_samples = protocol == "gossip"
+        rotate_samples = protocol in ("gossip", "gossip_async")
 
     state_specs = state_specs_of(dist, state_shapes, state_axes)
     param_specs = state_specs["params"]
@@ -152,12 +165,14 @@ def make_train_step_bundle(
 
     layout = None
     if gossip_packed:
-        if not getattr(optimizer, "elementwise", True):
+        if not (getattr(optimizer, "elementwise", True)
+                or getattr(optimizer, "packed_aware", False)):
             raise ValueError(
-                "gossip_packed requires an elementwise optimizer: this one "
-                "(e.g. lars) computes per-leaf norms, which would span whole "
-                "buckets instead of layers; use sgd/adamw or the per-leaf "
-                "gossip path")
+                "gossip_packed requires an elementwise or packed-aware "
+                "optimizer: this one computes per-leaf norms without reading "
+                "through the PackedParams.unpack() view, so they would span "
+                "whole buckets instead of layers; use sgd/adamw/lars or the "
+                "per-leaf gossip path")
         _check_packable(mesh, param_specs)
         layout = build_layout(state_shapes["params"], skip_leading=1)
         packed_shapes = jax.eval_shape(
@@ -177,6 +192,11 @@ def make_train_step_bundle(
         topology=topology, num_rotations=num_rotations, alpha=gossip_alpha,
         mode=gossip_mode, fused=gossip_fused, mix_impl=mix_impl,
         packed_layout=layout, seed=seed)
+
+    if proto.carries_inbox:
+        # the staleness-1 inbox rides in the train state with the params'
+        # shapes and sharding (and is checkpointed with them)
+        state_specs = dict(state_specs, inbox=param_specs)
 
     # per-layer remat happens inside the stack (blocks.stack_apply) — the
     # whole-loss checkpoint variant kept 130+GB of scan residuals alive.
@@ -201,16 +221,28 @@ def make_train_step_bundle(
         batch = jax.tree.map(
             lambda x, s: jax.lax.with_sharding_constraint(x, dist.sharding(s)),
             batch, batch_specs)
+        new_inbox = None
+        if proto.carries_inbox:
+            # staleness-1 arrival: mix last step's update against the inbox,
+            # then re-dispatch immediately. The ppermute's result is consumed
+            # only as the NEXT step's inbox, so the wire transfer overlaps
+            # the entire forward/backward below.
+            params, new_inbox = proto.comm_params(params, phase,
+                                                  inbox=state["inbox"])
         (_, metrics), grads = grad_fn(params, batch)
         grads = proto.comm_grads(grads, phase)
         new_params, new_opt = optimizer.update(params, grads, state["opt"])
-        new_params = proto.comm_params(new_params, phase)
+        if not proto.carries_inbox:
+            new_params = proto.comm_params(new_params, phase)
         new_params = jax.tree.map(
             lambda x, s: jax.lax.with_sharding_constraint(x, dist.sharding(s)),
             new_params, param_specs)
         next_batch = shuffle(batch) if shuffle is not None else batch
         metrics = jax.tree.map(lambda m: m.mean(), metrics)
-        return {"params": new_params, "opt": new_opt}, next_batch, metrics
+        new_state = {"params": new_params, "opt": new_opt}
+        if proto.carries_inbox:
+            new_state["inbox"] = new_inbox
+        return new_state, next_batch, metrics
 
     return TrainStepBundle(
         step_fn=train_step, state_specs=state_specs, batch_specs=batch_specs,

@@ -4,9 +4,25 @@ Runs the protocol-neutral train step over the synthetic sharded pipeline,
 cycling the gossip phase through the schedule (static-phase compiled variants
 are cached by phase index). Works on a real mesh or the single-device smoke
 mesh alike.
+
+Dispatch pipelining: jax dispatches steps asynchronously, so the host can run
+ahead of the device — essential for ``gossip_async``, whose step-t wire
+transfer settles while step t+1's compute executes. Unbounded run-ahead,
+however, queues arbitrarily many host batches and step outputs, so the
+trainer keeps a **bounded in-flight window**: at most ``2 + 2 * staleness``
+dispatched-but-unfinished steps (tunable via ``inflight_window``); beyond
+that it blocks on the oldest step's metrics before dispatching more.
+
+Buffer donation: packed states (bundle.layout set) donate the state into the
+step, so the per-bucket gossip mix writes onto the previous step's buffers
+instead of double-allocating; the caller's state object is consumed
+(``Trainer.state`` always holds the live one). Per-leaf states keep
+``donate=False`` — their scan-stacked leaves alias model views that XLA
+cannot always reuse.
 """
 from __future__ import annotations
 
+import collections
 import time
 from typing import Any, Callable, Dict, List, Optional
 
@@ -24,20 +40,31 @@ class Trainer:
     def __init__(self, bundle: TrainStepBundle, state: Any,
                  dataset: ShardedTokenDataset,
                  log_every: int = 10,
-                 log_fn: Callable[[str], None] = print):
+                 log_fn: Callable[[str], None] = print,
+                 inflight_window: Optional[int] = None,
+                 donate: Optional[bool] = None):
         self.bundle = bundle
         self.state = state
         self.dataset = dataset
         self.log_every = log_every
         self.log_fn = log_fn
-        self._steps_cache: Dict[int, Callable] = {}
+        self.staleness = getattr(bundle.protocol, "staleness", 0)
+        # async protocols get a deeper window: step t's transfer must be able
+        # to stay in flight while t+1 dispatches.
+        self.inflight_window = (inflight_window if inflight_window is not None
+                                else 2 + 2 * self.staleness)
+        # packed states donate: buckets mix in place instead of reallocating
+        self.donate = (bundle.layout is not None) if donate is None else donate
+        self._steps_cache: Dict[Any, Callable] = {}
+        self._inflight: collections.deque = collections.deque()
         self.history: List[Dict[str, float]] = []
 
     def _step_fn(self, phase: int):
         period = max(self.bundle.protocol.period, 1)
         phase = phase % period
         if phase not in self._steps_cache:
-            self._steps_cache[phase] = self.bundle.jitted(phase, donate=False)
+            self._steps_cache[phase] = self.bundle.jitted(phase,
+                                                          donate=self.donate)
         return self._steps_cache[phase]
 
     def _drain(self, pending: List) -> None:
@@ -50,6 +77,17 @@ class Trainer:
             rec["step"] = step
             self.history.append(rec)
         pending.clear()
+        self._inflight.clear()
+
+    def _bound_inflight(self, metrics) -> None:
+        """Cap host run-ahead: block on the oldest dispatched step once more
+        than ``inflight_window`` steps are in flight."""
+        token = jax.tree.leaves(metrics)[0]
+        self._inflight.append(token)
+        while len(self._inflight) > self.inflight_window:
+            oldest = self._inflight.popleft()
+            if hasattr(oldest, "block_until_ready"):
+                oldest.block_until_ready()
 
     def run(self, num_steps: int, start_step: int = 0) -> List[Dict[str, float]]:
         dp = max(self.bundle.dist.dp, 1)
@@ -61,6 +99,7 @@ class Trainer:
             fn = self._step_fn(step)
             self.state, rotated, metrics = fn(self.state, batch)
             pending.append((step, metrics))
+            self._bound_inflight(metrics)
             if self.log_every and step % self.log_every == 0:
                 self._drain(pending)
                 rec = self.history[-1]

@@ -1,0 +1,365 @@
+"""Async gossip runtime (staleness-1 inbox protocol, GossipGraD §5).
+
+Covers: the shard_map implementation == the delayed-mix simulator oracle
+bit-exactly at p=8 (fp32, every schedule phase, per-leaf + packed, static +
+dynamic); bounded replica drift vs sync gossip over multiple rotation
+periods; protocol/state plumbing at dp=1 (degenerates to local SGD exactly);
+inbox checkpoint roundtrips; and (subprocess, 8 forced host devices) an
+end-to-end train + save + restore + continue determinism check through the
+real bundle/trainer/checkpoint stack.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (PROTOCOLS, build_schedule, gossip_mix_sim_delayed,
+                        make_async_sim_train_step, make_sim_train_step,
+                        replicate)
+from repro.optim import sgd
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ------------------------------------------------------------ oracle algebra
+
+def test_delayed_oracle_bootstrap_is_identity():
+    """Step 0 with the self-inbox bootstrap mixes to exactly the params."""
+    p = 8
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.normal(size=(p, 5)), jnp.float32)}
+    inbox = jax.tree.map(jnp.copy, params)
+    sched = build_schedule(p, seed=1)
+    mixed, new_inbox = gossip_mix_sim_delayed(params, inbox,
+                                              jnp.asarray(sched.recv_from(0)))
+    np.testing.assert_array_equal(np.asarray(mixed["w"]),
+                                  np.asarray(params["w"]))
+    # ...and the first dispatch is the first real exchange
+    np.testing.assert_array_equal(
+        np.asarray(new_inbox["w"]),
+        np.asarray(params["w"])[np.asarray(sched.recv_from(0))])
+
+
+def test_delayed_oracle_preserves_replica_mean():
+    """Each arrival mix is (1-a)I + a*P with P a permutation — column sums
+    are 1, so the replica mean is invariant step to step (the same
+    consensus-preservation the sync mix has)."""
+    p = 8
+    sched = build_schedule(p, num_rotations=3, seed=4)
+    rng = np.random.default_rng(2)
+    params = {"a": jnp.asarray(rng.normal(size=(p, 3, 2)), jnp.float32)}
+    inbox = jax.tree.map(jnp.copy, params)
+    mean0 = np.asarray(params["a"]).mean(0)
+    for t in range(2 * sched.period):
+        params, inbox = gossip_mix_sim_delayed(
+            params, inbox, jnp.asarray(sched.recv_from(t)))
+    np.testing.assert_allclose(np.asarray(params["a"]).mean(0), mean0,
+                               rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------- convergence equivalence
+
+def _quadratic_loss(target):
+    def loss(params, batch):
+        return jnp.sum((params["w"] - target - batch) ** 2)
+    return loss
+
+
+def _run_sim(protocol, p=8, steps=None, lr=0.05, seed=3, shard_bias=1.0,
+             num_rotations=2):
+    sched = build_schedule(p, num_rotations=num_rotations, seed=seed)
+    steps = steps if steps is not None else 4 * sched.period
+    target = jnp.arange(4.0)
+    loss = _quadratic_loss(target)
+    opt = sgd(lr, momentum=0.0)
+    params = replicate({"w": jnp.zeros(4)}, p)
+    opt_state = opt.init(params)
+    rng = np.random.default_rng(seed)
+    bias = rng.normal(scale=shard_bias, size=(p, 4)) if shard_bias else 0.0
+    hist = []
+    if protocol == "gossip_async":
+        step = make_async_sim_train_step(loss, opt, sched)
+        inbox = jax.tree.map(jnp.copy, params)
+        for t in range(steps):
+            batch = jnp.asarray(bias + rng.normal(scale=0.1, size=(p, 4)),
+                                jnp.float32)
+            opt_state, params, inbox, m = step(opt_state, params, inbox,
+                                               batch, jnp.int32(t))
+            hist.append({k: float(v) for k, v in m.items()})
+    else:
+        step = make_sim_train_step(loss, opt, sched, protocol=protocol)
+        for t in range(steps):
+            batch = jnp.asarray(bias + rng.normal(scale=0.1, size=(p, 4)),
+                                jnp.float32)
+            opt_state, params, m = step(opt_state, params, batch,
+                                        jnp.int32(t))
+            hist.append({k: float(v) for k, v in m.items()})
+    return params, hist, target, sched
+
+
+def test_async_reaches_optimum_and_consensus():
+    params, hist, target, _ = _run_sim("gossip_async", steps=120,
+                                       shard_bias=0.0)
+    w = np.asarray(params["w"])
+    assert np.allclose(w, np.asarray(target)[None], atol=0.15)
+    assert hist[-1]["replica_variance"] < 1e-3
+
+
+def test_async_drift_within_2x_of_sync():
+    """Acceptance: replica drift under gossip_async stays within 2x of sync
+    gossip over >= 2 full rotation periods (here 4, averaged over the last
+    period to damp step noise)."""
+    for seed in (3, 5):
+        _, h_async, _, sched = _run_sim("gossip_async", seed=seed)
+        _, h_sync, _, _ = _run_sim("gossip", seed=seed)
+        assert len(h_async) >= 2 * sched.period
+        tail = sched.period
+        drift_async = np.mean([h["replica_variance"] for h in h_async[-tail:]])
+        drift_sync = np.mean([h["replica_variance"] for h in h_sync[-tail:]])
+        assert drift_async <= 2.0 * drift_sync, (seed, drift_async, drift_sync)
+
+
+def test_async_tracks_sync_gossip_loss():
+    """Convergence equivalence: staleness-1 matches sync gossip's final loss
+    within noise (the paper's §5/§6 claim)."""
+    _, h_async, _, _ = _run_sim("gossip_async", steps=120, shard_bias=0.0)
+    _, h_sync, _, _ = _run_sim("gossip", steps=120, shard_bias=0.0)
+    assert abs(h_async[-1]["loss"] - h_sync[-1]["loss"]) < 0.1
+
+
+# ------------------------------------------------------------- protocol API
+
+def test_protocol_registry_and_inbox_flags():
+    from repro.core import make_protocol
+    from repro.launch.mesh import make_smoke_mesh
+    assert "gossip_async" in PROTOCOLS
+    mesh = make_smoke_mesh(1, 1)
+    proto = make_protocol("gossip_async", mesh, ("data",), {})
+    # dp=1 degenerates to local SGD: no inbox, passthrough comm_params
+    assert not proto.carries_inbox and proto.staleness == 0
+    tree = {"w": jnp.ones((1, 3))}
+    out = proto.comm_params(tree, 0)
+    assert out is tree
+
+
+def test_dp1_async_trainer_bitmatches_sync(tiny_bundle_factory):
+    """At dp=1 gossip_async must be exactly local SGD — bitwise the same
+    losses as sync gossip (both protocols degenerate)."""
+    losses = {}
+    for proto in ("gossip", "gossip_async"):
+        losses[proto] = tiny_bundle_factory(proto, packed=True, steps=4)
+    np.testing.assert_array_equal(losses["gossip"], losses["gossip_async"])
+
+
+@pytest.fixture
+def tiny_bundle_factory():
+    import dataclasses
+    from repro.configs import get_config
+    from repro.data import ShardedTokenDataset
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.launch.specs import train_input_specs
+    from repro.models import reduced
+    from repro.train import (Trainer, init_train_state, make_distribution,
+                             make_train_step_bundle)
+
+    def run(protocol, packed=False, steps=4):
+        cfg = dataclasses.replace(
+            reduced(get_config("qwen3-0.6b"), d_model=64),
+            param_dtype="float32", compute_dtype="float32")
+        dist = make_distribution(make_smoke_mesh(1, 1), "replica")
+        opt = sgd(0.3, momentum=0.9)
+        ss, sa, bs = train_input_specs(cfg, dist, 24, 4, opt)
+        bundle = make_train_step_bundle(
+            cfg, dist, opt, state_shapes=ss, state_axes=sa, batch_shapes=bs,
+            protocol=protocol, remat=False, gossip_packed=packed)
+        state, _ = init_train_state(
+            jax.random.key(0), cfg, dist, opt, packed=packed,
+            layout=bundle.layout, inbox=bundle.protocol.carries_inbox)
+        ds = ShardedTokenDataset(vocab=cfg.vocab, seq_len=24, n_shards=1,
+                                 batch_per_shard=4, seed=0)
+        return [h["loss"] for h in
+                Trainer(bundle, state, ds, log_every=0).run(steps)]
+
+    return run
+
+
+# ------------------------------------------------------- inbox checkpointing
+
+def test_inbox_checkpoint_roundtrip(tmp_path):
+    """The staleness-1 inbox (PackedParams included) persists through the
+    leaf-keyed checkpoint format and restores bit-exactly."""
+    from repro.checkpoint import (checkpoint_exists, read_manifest,
+                                  restore_state, save_state)
+    from repro.core.buckets import PackedParams
+    rng = np.random.default_rng(7)
+    mk = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)
+    tree = {"w1": mk(4, 5, 3), "w2": mk(4, 130)}
+    inbox_tree = jax.tree.map(lambda x: x + 1.0, tree)
+    state = {"params": PackedParams.pack(tree, skip_leading=1),
+             "opt": {"step": jnp.int32(9)},
+             "inbox": PackedParams.pack(inbox_tree, skip_leading=1)}
+    d = str(tmp_path / "ck")
+    assert not checkpoint_exists(d)
+    save_state(d, state, step=9, metadata={"protocol": "gossip_async",
+                                           "phase": 3})
+    assert checkpoint_exists(d)
+    man = read_manifest(d)
+    assert man["step"] == 9 and man["metadata"]["phase"] == 3
+    rest, _ = restore_state(d, state)
+    assert isinstance(rest["inbox"], PackedParams)
+    got = rest["inbox"].unpack()
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(got[k]),
+                                      np.asarray(inbox_tree[k]))
+    # params and inbox restore as DISTINCT values (no aliasing of buffers)
+    np.testing.assert_array_equal(np.asarray(rest["params"].unpack()["w1"]),
+                                  np.asarray(tree["w1"]))
+
+
+# ------------------------ p=8 subprocess: oracle equivalence + e2e determinism
+
+_EQUIV_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import repro  # jax compat shims
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core import (build_schedule, build_layout, PackedParams,
+                        make_async_gossip_mix, make_packed_async_gossip_mix,
+                        gossip_mix_sim_delayed)
+from repro.kernels import gossip_mix_bucket
+
+mesh = jax.make_mesh((8,), ("data",))
+p = 8
+sched = build_schedule(p, num_rotations=2, seed=11)
+rng = np.random.default_rng(2)
+tree = {
+    "w1": jnp.asarray(rng.normal(size=(p, 5, 3)), jnp.float32),
+    "w2": jnp.asarray(rng.normal(size=(p, 130)), jnp.float32),
+    "w3": jnp.asarray(rng.normal(size=(p, 2, 7, 11)), jnp.float32),
+}
+specs = {"w1": P("data", None, None), "w2": P("data", None),
+         "w3": P("data", None, None, None)}
+layout = build_layout(tree, skip_leading=1)
+
+for mode in ("static", "dynamic"):
+    lmix = make_async_gossip_mix(mesh, ("data",), sched, specs, mode=mode)
+    pmix = make_packed_async_gossip_mix(
+        mesh, ("data",), sched, layout, mode=mode,
+        mix_impl=lambda a, b, al: gossip_mix_bucket(a, b, al))
+    got_l = dict(tree); inbox_l = jax.tree.map(jnp.copy, got_l)
+    got_p = PackedParams.pack(tree, layout)
+    inbox_p = jax.tree.map(jnp.copy, got_p)
+    want = dict(tree); inbox_w = jax.tree.map(jnp.copy, want)
+    for t in range(sched.period + 2):  # every phase + wraparound
+        ph = t if mode == "static" else jnp.int32(t)
+        got_l, inbox_l = lmix(got_l, inbox_l, ph)
+        got_p, inbox_p = pmix(got_p, inbox_p, ph)
+        want, inbox_w = gossip_mix_sim_delayed(
+            want, inbox_w, jnp.asarray(sched.recv_from(t)))
+        up, ui = got_p.unpack(), inbox_p.unpack()
+        for k in tree:  # fp32: bit-identical, params AND inbox
+            np.testing.assert_array_equal(np.asarray(got_l[k]), np.asarray(want[k]))
+            np.testing.assert_array_equal(np.asarray(inbox_l[k]), np.asarray(inbox_w[k]))
+            np.testing.assert_array_equal(np.asarray(up[k]), np.asarray(want[k]))
+            np.testing.assert_array_equal(np.asarray(ui[k]), np.asarray(inbox_w[k]))
+    print(f"ok mode={mode} phases={sched.period + 2}")
+
+# the packed async mix step must contain no per-step pack/unpack
+jx = str(jax.make_jaxpr(lambda q, b: pmix(q, b, 0))(got_p, inbox_p))
+assert "concatenate" not in jx, "packed async mix has a per-step concat"
+print("ok jaxpr no-concat")
+print("ALL_OK")
+"""
+
+
+@pytest.mark.slow
+def test_async_shardmap_matches_delayed_oracle():
+    """Acceptance: staleness-1 shard_map implementation == simulator oracle
+    bit-exactly (fp32, p=8) across all schedule phases — per-leaf and packed,
+    static and dynamic phase selection, params and inbox both."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", _EQUIV_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "ALL_OK" in r.stdout
+
+
+_E2E_SCRIPT = r"""
+import os, tempfile
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import repro
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.checkpoint import restore_state, save_state
+from repro.configs import get_config
+from repro.data import ShardedTokenDataset
+from repro.launch.mesh import make_smoke_mesh
+from repro.launch.specs import train_input_specs
+from repro.models import reduced
+from repro.optim import sgd
+from repro.train import (Trainer, init_train_state, make_distribution,
+                         make_train_step_bundle)
+
+cfg = dataclasses.replace(reduced(get_config("qwen3-0.6b"), d_model=32),
+                          param_dtype="float32", compute_dtype="float32")
+dist = make_distribution(make_smoke_mesh(8, 1), "replica")
+assert dist.dp == 8
+opt = sgd(0.3, momentum=0.9)
+ss, sa, bs = train_input_specs(cfg, dist, 16, 16, opt)
+
+def make(n_seed=0):
+    bundle = make_train_step_bundle(
+        cfg, dist, opt, state_shapes=ss, state_axes=sa, batch_shapes=bs,
+        protocol="gossip_async", remat=False, gossip_packed=True)
+    assert bundle.protocol.carries_inbox and bundle.protocol.staleness == 1
+    state, _ = init_train_state(jax.random.key(n_seed), cfg, dist, opt,
+                                packed=True, layout=bundle.layout, inbox=True)
+    ds = ShardedTokenDataset(vocab=cfg.vocab, seq_len=16, n_shards=8,
+                             batch_per_shard=2, seed=0)
+    return bundle, state, ds
+
+# straight run: 2N steps
+bundle, state, ds = make()
+tr = Trainer(bundle, state, ds, log_every=0)
+hist_straight = tr.run(8)
+
+# resumed run: N steps, checkpoint (inbox + step), restore, N more
+bundle, state, ds = make()
+tr1 = Trainer(bundle, state, ds, log_every=0)
+tr1.run(4)
+ckdir = tempfile.mkdtemp()
+save_state(ckdir, tr1.state, step=4,
+           metadata={"protocol": "gossip_async", "phase": 4 % bundle.protocol.period})
+bundle2, state2, ds2 = make(n_seed=1)  # deliberately different init
+restored, man = restore_state(ckdir, state2)
+tr2 = Trainer(bundle2, restored, ds2, log_every=0)
+hist_resumed = tr2.run(4, start_step=man["step"])
+
+a = [h["loss"] for h in hist_straight[4:]]
+b = [h["loss"] for h in hist_resumed]
+np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+# the resumed state (params AND inbox) bit-matches the straight run's
+for k in ("params", "inbox"):
+    for x, y in zip(jax.tree.leaves(tr.state[k]), jax.tree.leaves(tr2.state[k])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+print("E2E_OK")
+"""
+
+
+@pytest.mark.slow
+def test_async_train_checkpoint_resume_p8():
+    """Acceptance: gossip_async trains end to end at p=8 through the packed
+    bundle/trainer stack and checkpoint-resume is bit-deterministic (inbox
+    buckets + phase persist)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", _E2E_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "E2E_OK" in r.stdout

@@ -43,6 +43,58 @@ def test_schedule_rows_are_permutations(p, rotations, seed):
         assert sorted(row) == list(range(p))
 
 
+@given(st.integers(2, 64), st.sampled_from(["dissemination", "hypercube"]),
+       st.integers(1, 4), st.integers(0, 99))
+@settings(max_examples=60, deadline=None)
+def test_rotated_schedule_steps_are_bijective(p, topology, rotations, seed):
+    """Balanced communication survives rotation (§4.5.1): at EVERY step of a
+    rotated schedule, send_to is a true bijection — recv_from inverts it
+    exactly (recv_from[send_to[i]] == i), for both base topologies,
+    including non-power-of-two p for dissemination."""
+    if topology == "hypercube":
+        p = 1 << max(1, p.bit_length() - 1)  # nearest power of two <= p
+    s = build_schedule(p, topology=topology, num_rotations=rotations,
+                       seed=seed)
+    for t in range(s.period):
+        send = s.send_to(t)
+        recv = s.recv_from(t)
+        assert sorted(send) == list(range(p))          # surjective + injective
+        assert np.array_equal(recv[send], np.arange(p))  # true inverse
+        assert np.array_equal(send[recv], np.arange(p))
+
+
+@given(st.sampled_from([2, 4, 8, 16, 32, 64]), st.integers(1, 4),
+       st.integers(0, 99))
+@settings(max_examples=40, deadline=None)
+def test_rotated_hypercube_stays_involutive(p, rotations, seed):
+    """Relabeling by sigma preserves the pairwise-exchange property: every
+    rotated hypercube step is still its own inverse."""
+    s = build_schedule(p, topology="hypercube", num_rotations=rotations,
+                       seed=seed)
+    for t in range(s.period):
+        send = s.send_to(t)
+        assert np.array_equal(send[send], np.arange(p))
+
+
+@given(st.integers(2, 96), st.integers(1, 4), st.integers(0, 99))
+@settings(max_examples=40, deadline=None)
+def test_every_rotation_round_diffuses_in_log_p(p, rotations, seed):
+    """§4.4 under rotation: EACH round of a rotated dissemination schedule
+    (a relabeled copy of the base topology) completes diffusion in exactly
+    ceil(log2 p) substeps — including non-power-of-two p."""
+    s = build_schedule(p, num_rotations=rotations, seed=seed)
+    assert s.substeps == log2_steps(p)
+    for r in range(rotations):
+        reach = np.eye(p, dtype=bool)
+        for k in range(s.substeps):
+            recv = s.recv_from(r * s.substeps + k)
+            reach = reach | reach[recv]
+            if k < s.substeps - 1 and p > 2:
+                # sub-linear diffusion is tight: not complete a step early
+                assert not reach.all() or p == 2
+        assert reach.all()
+
+
 @given(st.integers(2, 128))
 @settings(max_examples=40, deadline=None)
 def test_dissemination_diffuses_in_log_p(p):
