@@ -53,9 +53,11 @@ mesh = jax.make_mesh((p,), ("data",))
 sched = build_schedule(p, num_rotations=2, seed=0)
 rng = np.random.default_rng(0)
 # ~1 MiB per replica across odd-sized leaves -> a few buckets
+TARGET_BUCKET_BYTES = 1 << 18
 tree = {f"w{i}": jnp.asarray(rng.normal(size=(p, n)), jnp.float32)
         for i, n in enumerate((1 << 16, 3 * (1 << 15), 1 << 15, 130))}
-layout = build_layout(tree, skip_leading=1, target_bucket_bytes=1 << 18)
+layout = build_layout(tree, skip_leading=1,
+                      target_bucket_bytes=TARGET_BUCKET_BYTES)
 params0 = PackedParams.pack(tree, layout)
 specs = packed_param_specs(layout, ("data",))
 sh = lambda t: jax.tree.map(
@@ -120,7 +122,14 @@ print(json.dumps({
     "p": p, "steps": STEPS, "wire_ms": WIRE_S * 1e3,
     "compute_iters": COMPUTE_ITERS,
     "bytes_per_replica": layout.padded_bytes(),
+    # the layout actually used: this bench forces small buckets to exercise
+    # multi-bucket pipelining, so its bucket count differs from
+    # kernels_bench's default-size layout by design — emit both so
+    # BENCH_*.json stay comparable across PRs
     "n_buckets": layout.num_buckets,
+    "target_bucket_bytes": TARGET_BUCKET_BYTES,
+    "bucket_sizes": list(layout.bucket_sizes),
+    "bucket_dtypes": list(layout.bucket_dtypes),
     "sync_gossip_ms_per_step": sync_ms,
     "gossip_async_ms_per_step": async_ms,
     "async_speedup": sync_ms / max(async_ms, 1e-9),

@@ -1,0 +1,214 @@
+"""Fused mix+apply update engine vs the unfused mix-then-apply path.
+
+Per-update-step cost over the stablelm-1.6b leaf structure at laptop width
+(same substrate as kernels_bench.gossip_engine_rows), with the gossip mix
+partner standing in for the landed exchange (the collective itself is
+benchmarked in async_bench / table1):
+
+* **fused** — the new default packed path: ONE single-sweep
+  ``Optimizer.fused_update`` call per bucket (kernels/fused_update.py; the
+  jnp twin on CPU — XLA fuses the whole mix+momentum+step chain into one
+  pass — the Pallas kernel on TPU);
+* **mix_then_apply** — the pre-fusion packed path exactly as PR 1/2 shipped
+  it: the standalone ``gossip_mix_bucket`` kernel (interpret mode on CPU, as
+  the real train step ran it) in one dispatch, the tree-level
+  ``optimizer.update`` sweep in another;
+* **mix_then_apply_jnp** — the same two-pass composition with a jnp mix
+  (the strongest CPU-native unfused baseline: what mix-then-apply costs
+  when both passes are XLA-compiled but still materialize between);
+* **old_fused** — the retired PR-0 ``fused=True`` concat path (concat +
+  fp32 cast + split EVERY step) followed by the update sweep — the
+  historical baseline.
+
+Each variant also gets a modeled HBM-bytes/step figure (reads + writes over
+the persistent state per step, from the layout's actual byte sizes) — the
+quantity the fusion actually shrinks on real hardware.  Reading the CPU
+wall numbers: the headline ``fused_speedup_vs_mix_then_apply`` compares
+against the path the packed train step ACTUALLY ran before this PR and is
+the acceptance figure; the ``_jnp`` row is a stricter diagnostic whose
+margin shrinks to parity-within-noise at full width on CPU (XLA's CPU
+thread pool hides the extra materialization that HBM does not) — the
+modeled-bytes column, not that row, carries the TPU story.  Results land
+in ``BENCH_fused_update.json`` with the layout actually used (bucket count
++ per-bucket sizes) so runs are comparable across PRs.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.buckets import PackedParams, build_layout
+from repro.kernels import gossip_mix_bucket
+from repro.models import lm_init, reduced
+from repro.optim import sgd
+from .common import timed_us
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                          "BENCH_fused_update.json")
+ALPHA = 0.5
+
+
+def _layout_record(layout):
+    itemsize = [np.dtype(d).itemsize for d in layout.bucket_dtypes]
+    return {
+        "n_buckets": layout.num_buckets,
+        "bucket_sizes": list(layout.bucket_sizes),
+        "bucket_bytes": [n * i for n, i in zip(layout.bucket_sizes, itemsize)],
+        "bucket_dtypes": list(layout.bucket_dtypes),
+        "exact_bytes": layout.exact_bytes(),
+        "padded_bytes": layout.padded_bytes(),
+    }
+
+
+def _modeled_bytes(layout, *, fused: bool, momentum: bool = True) -> dict:
+    """HBM traffic per update step for SGD-momentum over the packed state.
+
+    unfused: mix pass (read param + partner, write mixed) + optimizer pass
+    (read mixed + grad + mom, write param' + mom') = 8 param-sized streams.
+    fused:   one pass (read param + grad + partner + mom, write param' +
+    mom') = 6 streams; mixed never materializes.
+    """
+    P = layout.padded_bytes()
+    n_mom = 1 if momentum else 0
+    if fused:
+        reads, writes = 3 + n_mom, 1 + n_mom
+    else:
+        reads, writes = (2) + (2 + n_mom), (1) + (1 + n_mom)
+    return {"passes": reads + writes, "bytes_per_step": (reads + writes) * P}
+
+
+def rows(smoke: bool = False):
+    iters = 4 if smoke else 20
+    cfg = reduced(get_config("stablelm-1.6b"),
+                  n_layers=8 if smoke else 24, d_model=128)
+    params, _ = lm_init(jax.random.key(0), cfg)
+    partner_tree = jax.tree.map(
+        lambda x: x + jnp.asarray(0.01, x.dtype), params)
+    grads_tree = jax.tree.map(
+        lambda x: x * jnp.asarray(0.1, x.dtype), params)
+    opt = sgd(0.1, momentum=0.9)
+
+    layout = build_layout(params)
+    pk = PackedParams.pack(params, layout)
+    bk = PackedParams.pack(partner_tree, layout)
+    gk = PackedParams.pack(grads_tree, layout)
+    state = opt.init(pk)
+
+    # --- fused: one single-sweep fused_update per bucket, one dispatch
+    def fused(pk, gk, bk, state):
+        step = state["step"]
+        out, moms = [], []
+        for i in range(layout.num_buckets):
+            p2, (m2,) = opt.fused_update(
+                i, pk.buckets[i], gk.buckets[i], bk.buckets[i],
+                (state["mom"].buckets[i],), step=step, alpha=ALPHA,
+                layout=layout)
+            out.append(p2)
+            moms.append(m2)
+        return (PackedParams(out, layout),
+                {"step": step + 1, "mom": PackedParams(moms, layout)})
+
+    fused_fn = jax.jit(fused)
+
+    # --- mix-then-apply, exactly the pre-fusion packed path: standalone
+    # bucket-mix kernel dispatch, then the tree-level optimizer sweep
+    def mix_kernel(pk, bk):
+        return PackedParams([gossip_mix_bucket(a, b, ALPHA)
+                             for a, b in zip(pk.buckets, bk.buckets)], layout)
+
+    def mix_jnp(pk, bk):
+        return PackedParams(
+            [(a.astype(jnp.float32) * (1.0 - ALPHA)
+              + b.astype(jnp.float32) * ALPHA).astype(a.dtype)
+             for a, b in zip(pk.buckets, bk.buckets)], layout)
+
+    mix_kernel_fn = jax.jit(mix_kernel)
+    mix_jnp_fn = jax.jit(mix_jnp)
+    apply_fn = jax.jit(opt.update)
+
+    def mix_then_apply(mix_fn):
+        def run(pk, gk, bk, state):
+            mixed = mix_fn(pk, bk)      # pass 1: the standalone mix sweep
+            return apply_fn(mixed, gk, state)  # pass 2-3: the update sweeps
+        return run
+
+    # --- old_fused: the retired concat-every-step runtime path (historical
+    # baseline; lives on only here and in kernels_bench)
+    leaves, treedef = jax.tree.flatten(params)
+    shapes = [l.shape for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+
+    def old_fused_mix(A, bflat):
+        ls = jax.tree.leaves(A)
+        buf = jnp.concatenate([l.astype(jnp.float32).reshape(-1) for l in ls])
+        buf = buf * (1.0 - ALPHA) + bflat * ALPHA
+        out, off = [], 0
+        for shp, dt in zip(shapes, dtypes):
+            n = int(np.prod(shp))
+            out.append(buf[off:off + n].reshape(shp).astype(dt))
+            off += n
+        return jax.tree.unflatten(treedef, out)
+
+    old_mix_fn = jax.jit(old_fused_mix)
+    old_apply_fn = jax.jit(opt.update)
+    bflat = jnp.concatenate(
+        [l.astype(jnp.float32).reshape(-1)
+         for l in jax.tree.leaves(partner_tree)])
+    leaf_state = opt.init(params)
+
+    def old_fused_run(A, gA, bflat, st):
+        mixed = old_mix_fn(A, bflat)
+        return old_apply_fn(mixed, gA, st)
+
+    t_fused = timed_us(lambda: fused_fn(pk, gk, bk, state), iters=iters)
+    t_mta = timed_us(lambda: mix_then_apply(mix_kernel_fn)(pk, gk, bk, state),
+                     iters=iters)
+    t_mta_jnp = timed_us(
+        lambda: mix_then_apply(mix_jnp_fn)(pk, gk, bk, state), iters=iters)
+    t_old = timed_us(lambda: old_fused_run(params, grads_tree, bflat,
+                                           leaf_state), iters=iters)
+
+    record = {
+        "arch": cfg.name,
+        "smoke": smoke,
+        "structure": f"{cfg.n_layers}-layer stablelm-1.6b leaf tree "
+                     "@ d_model=128",
+        "optimizer": "sgd_momentum",
+        "alpha": ALPHA,
+        "layout": _layout_record(layout),
+        "us_per_update_step": {
+            "fused": t_fused,
+            "mix_then_apply": t_mta,
+            "mix_then_apply_jnp": t_mta_jnp,
+            "old_fused": t_old,
+        },
+        "modeled_hbm": {
+            "fused": _modeled_bytes(layout, fused=True),
+            "mix_then_apply": _modeled_bytes(layout, fused=False),
+        },
+        "fused_speedup_vs_mix_then_apply": t_mta / max(t_fused, 1e-9),
+        "fused_speedup_vs_mix_then_apply_jnp": t_mta_jnp / max(t_fused, 1e-9),
+        "fused_speedup_vs_old_fused": t_old / max(t_fused, 1e-9),
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(record, f, indent=1)
+
+    lay = record["layout"]
+    return [
+        ("fused_update_1p6b", t_fused,
+         f"buckets={lay['n_buckets']};"
+         f"modeled_bytes={record['modeled_hbm']['fused']['bytes_per_step']:.3e};"
+         f"passes={record['modeled_hbm']['fused']['passes']}"),
+        ("fused_update_mix_then_apply_1p6b", t_mta,
+         f"speedup_fused={record['fused_speedup_vs_mix_then_apply']:.2f}x;"
+         f"passes={record['modeled_hbm']['mix_then_apply']['passes']}"),
+        ("fused_update_mix_then_apply_jnp_1p6b", t_mta_jnp,
+         f"speedup_fused={record['fused_speedup_vs_mix_then_apply_jnp']:.2f}x"),
+        ("fused_update_old_fused_1p6b", t_old,
+         "concat+f32cast+split every step (retired runtime path)"),
+    ]

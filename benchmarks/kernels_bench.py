@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.buckets import build_layout
+from repro.core.buckets import DEFAULT_BUCKET_BYTES, build_layout
 from repro.kernels import flash_mha, gossip_mix_flat, ssm_scan
 from repro.kernels.ref import attention_ref, gossip_mix_ref, ssm_scan_ref
 from repro.models import lm_init, reduced
@@ -48,9 +48,10 @@ def gossip_engine_rows(smoke: bool = False):
     # --- per-leaf: one (overlappable) mix per parameter leaf
     leaf_fn = jax.jit(lambda A, B: jax.tree.map(_mix, A, B))
 
-    # --- old fused=True: flatten+cast to ONE fp32 buffer every step, mix,
-    # split+cast back (the partner's flat buffer arrives from the ppermute,
-    # so it is pre-flattened outside the timed region)
+    # --- old fused=True (RETIRED from the runtime API; this inline copy is
+    # the historical baseline): flatten+cast to ONE fp32 buffer every step,
+    # mix, split+cast back (the partner's flat buffer arrives from the
+    # ppermute, so it is pre-flattened outside the timed region)
     leaves, treedef = jax.tree.flatten(params)
     shapes = [l.shape for l in leaves]
     dtypes = [l.dtype for l in leaves]
@@ -82,6 +83,11 @@ def gossip_engine_rows(smoke: bool = False):
     t_packed = timed_us(lambda: packed_fn(bkts_a, bkts_b), iters=iters)
 
     summ = layout.summary()
+    # report the layout ACTUALLY used (bucket count, per-bucket sizes,
+    # target): the laptop-width smoke arch packs into very few default-size
+    # buckets while async_bench forces small buckets — without the layout in
+    # the record the two JSONs' bucket counts look contradictory and runs
+    # aren't comparable across PRs.
     record = {
         "arch": cfg.name,
         "smoke": smoke,
@@ -89,6 +95,12 @@ def gossip_engine_rows(smoke: bool = False):
                      "@ d_model=128",
         "n_leaves": n_leaves,
         "n_buckets": summ["num_buckets"],
+        "target_bucket_bytes": DEFAULT_BUCKET_BYTES,
+        "bucket_sizes": list(layout.bucket_sizes),
+        "bucket_bytes": [n * np.dtype(d).itemsize
+                         for n, d in zip(layout.bucket_sizes,
+                                         layout.bucket_dtypes)],
+        "bucket_dtypes": list(layout.bucket_dtypes),
         "exact_bytes": summ["exact_bytes"],
         "padded_bytes": summ["padded_bytes"],
         "pad_overhead": summ["pad_overhead"],

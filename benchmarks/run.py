@@ -12,6 +12,7 @@ suite). Figure/table mapping:
     fig17_every_logp   — Fig 17: gossip vs every-log(p) all-reduce
     kernels_bench      — Pallas kernel plumbing micro-bench
     async_bench        — §5 async gossip: sync vs staleness-1 step time
+    fused_update_bench — fused mix+apply vs mix-then-apply update engine
     ablation_robustness— beyond-paper: grad-vs-model gossip, dropped exchanges
 
 ``--smoke`` shrinks iteration counts for CI (suites that accept it).
@@ -30,6 +31,7 @@ SUITES = [
     "fig17_every_logp",
     "kernels_bench",
     "async_bench",
+    "fused_update_bench",
     "ablation_robustness",
 ]
 

@@ -1,9 +1,10 @@
 """Paper Table 1 + §3 economics: per-step communication of GossipGraD vs
 all-reduce SGD, (a) analytically across p, (b) measured from the compiled
-dry-run HLO (collective-permute vs all-reduce bytes in the train step), and
+dry-run HLO (collective-permute vs all-reduce bytes in the train step),
 (c) the bucketed-engine packing economics on the FULL-size 1.6B config:
 launches and bytes moved per gossip step for packed vs per-leaf vs the old
-fused fp32-scratch path."""
+fused fp32-scratch path, and (d) the fused mix+apply engine's memory-traffic
+table: HBM passes/bytes per update step before and after fusion."""
 from __future__ import annotations
 
 import glob
@@ -16,7 +17,7 @@ import numpy as np
 
 from repro.core import gossip_bytes_per_step
 from repro.core.buckets import build_layout
-from .common import ICI
+from .common import HBM, ICI
 
 
 def packed_engine_rows():
@@ -47,9 +48,54 @@ def packed_engine_rows():
     ]
 
 
+def update_traffic_rows():
+    """Memory-traffic table for the update path (fused mix+apply engine,
+    full-size stablelm-1.6b, eval_shape only): HBM passes-per-step and
+    bytes-per-step over the persistent state, before (standalone mix sweep +
+    tree-level optimizer sweeps) and after (one fused read + one fused write
+    pass per bucket).  The 'time' column is bytes / HBM bandwidth — the
+    memory-bound floor of the update step on a v5e chip.
+
+        sgd-momentum  unfused: mix(2R+1W) + opt(3R+2W)      = 8 passes
+                      fused:   1 fused read(4) + write(2)   = 6 passes
+        adamw         unfused: mix(2R+1W) + opt(4R+3W)      = 10 streams
+                      fused:   1 fused read(5) + write(3)   = 8 streams
+                      (m/v are fp32 regardless of param dtype — weighted
+                      by actual buffer bytes, not stream counts)
+    """
+    from repro.configs import get_config
+    from repro.models import lm_init
+
+    cfg = get_config("stablelm-1.6b")
+    shapes = jax.eval_shape(lambda: lm_init(jax.random.key(0), cfg)[0])
+    layout = build_layout(shapes)
+    P = layout.padded_bytes()                    # params / grads / sgd mom
+    F = sum(n * 4 for n in layout.bucket_sizes)  # fp32 moment buffers
+    cases = {
+        # optimizer: (unfused bytes, fused bytes)
+        "sgd_momentum": (
+            (2 * P + P) + (P + P + P) + (P + P),   # mix R2W1 + opt R3W2
+            (P + P + P + P) + (P + P)),            # fused  R4W2
+        "adamw": (
+            (2 * P + P) + (P + P + 2 * F) + (P + 2 * F),  # mix + opt R4W3
+            (P + P + P + 2 * F) + (P + 2 * F)),           # fused  R5W3
+    }
+    out = []
+    for name, (unfused, fused) in cases.items():
+        out.append((f"table1_update_traffic_unfused_{name}",
+                    unfused / HBM * 1e6,
+                    f"bytes={unfused:.3e};mix_pass+opt_sweeps"))
+        out.append((f"table1_update_traffic_fused_{name}",
+                    fused / HBM * 1e6,
+                    f"bytes={fused:.3e};single_sweep;"
+                    f"saving={(1 - fused / unfused) * 100:.0f}%"))
+    return out
+
+
 def rows():
     out = []
     out.extend(packed_engine_rows())
+    out.extend(update_traffic_rows())
     replica_bytes = 2 * 600e6  # qwen3-0.6b bf16
     for p in (4, 8, 16, 32, 64, 128, 256, 512):
         b = gossip_bytes_per_step(replica_bytes, dp=p, model_shards=16)

@@ -7,8 +7,10 @@ from .mixing import (consensus_contraction, is_doubly_stochastic,
 from .buckets import (BucketLayout, LeafSlot, PackedParams, build_layout,
                       packed_param_specs)
 from .gossip import (gossip_bytes_per_step, linear_pairs, make_gossip_mix,
-                     make_packed_gossip_mix)
-from .async_gossip import make_async_gossip_mix, make_packed_async_gossip_mix
+                     make_packed_fused_update, make_packed_gossip_mix)
+from .async_gossip import (make_async_gossip_mix,
+                           make_packed_async_gossip_mix,
+                           make_packed_fused_async_update)
 from .protocols import PROTOCOLS, Protocol, make_protocol
 from .shuffle import RingShardRotation, make_ring_shuffle
 from .simulate import (allreduce_mean_sim, gossip_mix_sim,

@@ -35,6 +35,12 @@ phase via the step counter), so resumed runs replay the identical sequence.
 Like the synchronous engine, two phase-selection modes exist: ``static``
 (one compiled step per schedule row — the production shape) and ``dynamic``
 (``lax.switch`` over all rows with a traced step index).
+
+The **fused mix+apply engine** (``make_packed_fused_async_update``) goes one
+step further for packed states: the inbox is just the mix operand of the
+single-sweep fused update kernel (kernels/fused_update.py), so the arrival
+mix costs no standalone pass at all — one fused read + one fused write over
+each bucket per step, optimizer update included.
 """
 from __future__ import annotations
 
@@ -46,13 +52,15 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from .buckets import BucketLayout, packed_param_specs
-from .gossip import linear_pairs
+from .buckets import BucketLayout, PackedParams, packed_param_specs
+from .gossip import (fused_opt_state_specs, linear_pairs,
+                     packed_fused_local_update)
 from .topology import GossipSchedule
 
 PyTree = Any
 
-__all__ = ["make_async_gossip_mix", "make_packed_async_gossip_mix"]
+__all__ = ["make_async_gossip_mix", "make_packed_async_gossip_mix",
+           "make_packed_fused_async_update"]
 
 
 def make_async_gossip_mix(
@@ -150,3 +158,99 @@ def make_packed_async_gossip_mix(
     specs = packed_param_specs(layout, tuple(axis_names))
     return make_async_gossip_mix(mesh, axis_names, schedule, specs,
                                  alpha=alpha, mode=mode, mix_impl=mix_impl)
+
+
+def make_packed_fused_async_update(
+    mesh: Mesh,
+    axis_names: Sequence[str],
+    schedule: GossipSchedule,
+    layout: BucketLayout,
+    optimizer,
+    *,
+    alpha: float = 0.5,
+    mode: str = "static",
+    impl: str | None = None,
+) -> Callable:
+    """Fused mix+apply engine for the staleness-1 inbox protocol: build
+    ``update(params, grads, inbox, opt_state, phase) -> (params',
+    opt_state', new_inbox)``.
+
+    The inbox is just the mix operand: the single-sweep fused kernel
+    (kernels/fused_update.py) computes the arrival mix
+    ``(1-alpha)*p + alpha*inbox`` and the optimizer update at the mixed
+    point in ONE pass per bucket — the standalone arrival-mix sweep the
+    unfused inbox protocol pays is gone.  The outgoing exchange
+    ``ppermute(params)`` (schedule row ``phase``) is dispatched at the TOP
+    of the program — it depends only on the incoming params, so XLA hoists
+    the whole forward/backward between collective-permute start/done — and
+    its result is returned solely as the next step's inbox: the same
+    dispatch-early / consume-next-step CARRY DISCIPLINE as PR 2's unfused
+    inbox protocol, with the same staleness bound (the partner contribution
+    misses exactly one update).  The per-step ALGEBRA differs from the
+    unfused protocol, though: the wire carries the raw incoming params
+    (PR 2 transmitted the post-arrival-mix params), and because mix+update
+    are one kernel at the END of the step, the caller's gradients are
+    evaluated at the incoming (pre-mix) params rather than the mixed point
+    — the fused train step is the GoSGD-style combined update, not a
+    bit-for-bit rewrite of the PR-2 step (``fused_update=False`` keeps
+    that).  The mixing matrix per step is unchanged ((1-a)I + aP, doubly
+    stochastic), so mean preservation and the diffusion argument carry
+    over.  Fresh runs bootstrap with ``inbox = copy(params)``, making step
+    0's arrival mix the identity.
+    """
+    axis_names = tuple(axis_names)
+    dp = int(np.prod([mesh.shape[a] for a in axis_names]))
+    if schedule.p != dp:
+        raise ValueError(
+            f"schedule built for p={schedule.p} but mesh axes {axis_names} "
+            f"give dp={dp}")
+    specs = packed_param_specs(layout, axis_names)
+    local = packed_fused_local_update(layout, optimizer, alpha=alpha,
+                                      impl=impl)
+    all_pairs = [linear_pairs(schedule, t) for t in range(schedule.period)]
+
+    def local_async(pairs, params, grads, inbox, opt_state):
+        # dispatch first: the outbox depends only on the incoming params
+        # and is consumed only as returned state — the wire overlaps
+        # everything scheduled before this call (the whole fwd/bwd)
+        outbox = PackedParams(
+            [jax.lax.ppermute(b, axis_names, pairs) for b in params.buckets],
+            layout)
+        new_params, new_state = local(params, grads, opt_state, inbox)
+        return new_params, new_state, outbox
+
+    def opt_specs_of(opt_state):
+        return fused_opt_state_specs(opt_state, specs)
+
+    if mode == "static":
+        def update(params, grads, inbox, opt_state, phase):
+            pairs = all_pairs[int(phase) % schedule.period]
+            opt_specs = opt_specs_of(opt_state)
+            fn = jax.shard_map(
+                functools.partial(local_async, pairs), mesh=mesh,
+                in_specs=(specs, specs, specs, opt_specs),
+                out_specs=(specs, opt_specs, specs), check_vma=False)
+            return fn(params, grads, inbox, opt_state)
+
+        return update
+
+    if mode == "dynamic":
+        def update(params, grads, inbox, opt_state, phase):
+            opt_specs = opt_specs_of(opt_state)
+
+            def body(params, grads, inbox, opt_state, ph):
+                branches = [functools.partial(local_async, pairs)
+                            for pairs in all_pairs]
+                return jax.lax.switch(ph % schedule.period, branches,
+                                      params, grads, inbox, opt_state)
+
+            inner = jax.shard_map(
+                body, mesh=mesh,
+                in_specs=(specs, specs, specs, opt_specs, P()),
+                out_specs=(specs, opt_specs, specs), check_vma=False)
+            return inner(params, grads, inbox, opt_state,
+                         jnp.asarray(phase, jnp.int32))
+
+        return update
+
+    raise ValueError(f"unknown gossip mode {mode!r}")

@@ -13,11 +13,10 @@ Asynchronicity (§5): the paper posts per-layer non-blocking sends and drives
 progress with MPI_TestAll. On TPU, XLA emits ``collective-permute-start/done``
 pairs and hoists compute between them natively, so the *structural* analogue
 is to issue one ppermute per parameter leaf ("layer-wise", the default) so the
-scheduler can overlap each with surrounding compute. A ``fused`` variant
-concatenates all leaves into a single buffer (one collective, less overlap
-surface, lower launch overhead) — but it pays a full pack/unpack round-trip
-through HBM plus fp32 casts on EVERY mix step, so it is kept only as the
-reference point the benchmarks beat.
+scheduler can overlap each with surrounding compute. (The retired
+``fused=True`` variant — concatenate all leaves into one fp32 scratch every
+step — survives only as the historical baseline inside
+``benchmarks/kernels_bench.py``.)
 
 The production path is the **bucketed engine** (``make_packed_gossip_mix``):
 parameters live in a handful of persistent LANE-aligned, dtype-homogeneous
@@ -25,6 +24,17 @@ buckets (core.buckets) packed once at init; each mix step is one ppermute +
 one in-place Pallas mix per bucket — the per-leaf path's overlap surface at
 O(buckets) launch cost, with zero per-step packing, zero casts, and native
 bf16 wire format.
+
+On top of it sits the **fused mix+apply engine**
+(``make_packed_fused_update``): the gossip mix and the optimizer update are
+one single-sweep kernel per bucket (kernels/fused_update.py), so a step
+makes ONE fused read pass and ONE fused write pass over the parameter state
+instead of the mix pass plus 2-3 optimizer passes.  The fused step dispatches
+``ppermute(params)`` — the partner's pre-update params — at the top of the
+step and consumes the result only in the end-of-step fused update, so the
+wire overlaps the whole forward/backward (the GoSGD-style combined update:
+the partner contribution trails the local one by exactly the one update the
+async inbox protocol also misses).
 
 Two phase-selection modes:
 
@@ -45,7 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from .buckets import BucketLayout, packed_param_specs
+from .buckets import BucketLayout, PackedParams, packed_param_specs
 from .topology import GossipSchedule
 
 PyTree = Any
@@ -54,6 +64,7 @@ __all__ = [
     "linear_pairs",
     "make_gossip_mix",
     "make_packed_gossip_mix",
+    "make_packed_fused_update",
     "gossip_bytes_per_step",
 ]
 
@@ -80,7 +91,6 @@ def make_gossip_mix(
     *,
     alpha: float = 0.5,
     mode: str = "static",
-    fused: bool = False,
     mix_impl: Callable | None = None,
 ) -> Callable[[PyTree, Any], PyTree]:
     """Build ``mix(params, phase) -> params``.
@@ -99,19 +109,6 @@ def make_gossip_mix(
             f"give dp={dp}")
 
     def local_mix(pairs: Tuple[Tuple[int, int], ...], params: PyTree) -> PyTree:
-        if fused:
-            leaves, treedef = jax.tree.flatten(params)
-            shapes = [l.shape for l in leaves]
-            dtypes = [l.dtype for l in leaves]
-            buf = jnp.concatenate(
-                [l.astype(jnp.float32).reshape(-1) for l in leaves])
-            buf = _mix_leaf(buf, axis_names, pairs, alpha, mix_impl)
-            out, off = [], 0
-            for shp, dt in zip(shapes, dtypes):
-                n = int(np.prod(shp))
-                out.append(buf[off:off + n].reshape(shp).astype(dt))
-                off += n
-            return jax.tree.unflatten(treedef, out)
         return jax.tree.map(
             lambda x: _mix_leaf(x, axis_names, pairs, alpha, mix_impl), params)
 
@@ -181,7 +178,159 @@ def make_packed_gossip_mix(
     """
     specs = packed_param_specs(layout, tuple(axis_names))
     return make_gossip_mix(mesh, axis_names, schedule, specs, alpha=alpha,
-                           mode=mode, fused=False, mix_impl=mix_impl)
+                           mode=mode, mix_impl=mix_impl)
+
+
+# --------------------------------------------------------------------------
+# Fused mix+apply engine: one single-sweep kernel per bucket per step.
+# --------------------------------------------------------------------------
+
+def packed_fused_local_update(layout: BucketLayout, optimizer, *,
+                              alpha: float, impl: str | None = None):
+    """Per-device body of the fused engine: ``body(params, grads, opt_state,
+    partner) -> (params', opt_state')`` over local PackedParams shards.
+
+    ``partner`` is the mix operand (the landed ppermute result — sync recv
+    or async inbox), or None for the pure local update (alpha treated as 0).
+    One ``optimizer.fused_update`` call — a single read+write sweep — per
+    bucket; the step counter advances exactly like the tree-level update.
+    Shared by the sync engine below and the async engine in async_gossip.py.
+    """
+    if optimizer.fused_update is None:
+        raise ValueError(
+            "optimizer has no fused_update backend; use sgd/adamw/lars or "
+            "the unfused mix-then-apply path")
+    moment_keys = tuple(optimizer.fused_moments)
+
+    def body(params, grads, opt_state, partner):
+        step = opt_state["step"]
+        new_buckets = []
+        new_moms = [[] for _ in moment_keys]
+        for i in range(layout.num_buckets):
+            moms = tuple(
+                opt_state[k].buckets[i] if opt_state[k] is not None else None
+                for k in moment_keys)
+            mix_operand = partner.buckets[i] if partner is not None else None
+            p2, m2 = optimizer.fused_update(
+                i, params.buckets[i], grads.buckets[i], mix_operand, moms,
+                step=step, alpha=alpha if partner is not None else 0.0,
+                layout=layout, impl=impl)
+            new_buckets.append(p2)
+            for j, mv in enumerate(m2):
+                new_moms[j].append(mv)
+        new_state = {"step": step + 1}
+        for j, k in enumerate(moment_keys):
+            new_state[k] = (PackedParams(new_moms[j], layout)
+                            if opt_state[k] is not None else None)
+        return PackedParams(new_buckets, layout), new_state
+
+    return body
+
+
+def fused_opt_state_specs(opt_state, specs: PyTree) -> dict:
+    """PartitionSpec tree for a fused-engine optimizer state: the step
+    counter is replicated, every moment tree mirrors the bucket specs."""
+    from jax.sharding import PartitionSpec as P
+    return {k: (P() if k == "step" else None if v is None else specs)
+            for k, v in opt_state.items()}
+
+
+def make_packed_fused_update(
+    mesh: Mesh,
+    axis_names: Sequence[str],
+    schedule: GossipSchedule | None,
+    layout: BucketLayout,
+    optimizer,
+    *,
+    alpha: float = 0.5,
+    mode: str = "static",
+    impl: str | None = None,
+) -> Callable:
+    """Build ``update(params, grads, opt_state, phase) -> (params',
+    opt_state')`` — the synchronous fused mix+apply engine.
+
+    With a ``schedule`` (dp > 1 gossip): each step dispatches one
+    ``ppermute(params)`` per bucket at the TOP of the program (the partner's
+    pre-update params — nothing below depends on it until the fused update,
+    so XLA hoists the whole forward/backward between collective-permute
+    start/done) and consumes the received buckets as the mix operand of the
+    single-sweep fused kernel.  The partner contribution therefore trails
+    the local gradient step by exactly one update — the same GoSGD-style
+    staleness the paper's §5 asynchrony embraces; the mixing matrix per step
+    is unchanged ((1-a)I + aP, doubly stochastic).
+
+    With ``schedule=None`` (dp == 1, or non-gossip protocols): no collective
+    is issued and the same kernel runs with alpha = 0 — one compiled step
+    body shape for every phase of every protocol.
+    """
+    axis_names = tuple(axis_names)
+    specs = packed_param_specs(layout, axis_names)
+    local = packed_fused_local_update(layout, optimizer,
+                                      alpha=alpha if schedule is not None
+                                      else 0.0, impl=impl)
+
+    def shmapped(fn, opt_specs):
+        return jax.shard_map(
+            fn, mesh=mesh,
+            in_specs=(specs, specs, opt_specs),
+            out_specs=(specs, opt_specs), check_vma=False)
+
+    def opt_specs_of(opt_state):
+        return fused_opt_state_specs(opt_state, specs)
+
+    if schedule is None:
+        def update(params, grads, opt_state, phase=None):
+            fn = shmapped(lambda p, g, s: local(p, g, s, None),
+                          opt_specs_of(opt_state))
+            return fn(params, grads, opt_state)
+
+        return update
+
+    dp = int(np.prod([mesh.shape[a] for a in axis_names]))
+    if schedule.p != dp:
+        raise ValueError(
+            f"schedule built for p={schedule.p} but mesh axes {axis_names} "
+            f"give dp={dp}")
+    all_pairs = [linear_pairs(schedule, t) for t in range(schedule.period)]
+
+    def local_sync(pairs, params, grads, opt_state):
+        # dispatch first: the recv depends only on the incoming params, so
+        # the wire runs under everything the caller scheduled before us
+        # (the whole fwd/bwd of the train step)
+        recv = PackedParams(
+            [jax.lax.ppermute(b, axis_names, pairs) for b in params.buckets],
+            layout)
+        return local(params, grads, opt_state, recv)
+
+    if mode == "static":
+        def update(params, grads, opt_state, phase):
+            pairs = all_pairs[int(phase) % schedule.period]
+            fn = shmapped(functools.partial(local_sync, pairs),
+                          opt_specs_of(opt_state))
+            return fn(params, grads, opt_state)
+
+        return update
+
+    if mode == "dynamic":
+        def update(params, grads, opt_state, phase):
+            opt_specs = opt_specs_of(opt_state)
+
+            def body(params, grads, opt_state, ph):
+                branches = [functools.partial(local_sync, pairs)
+                            for pairs in all_pairs]
+                return jax.lax.switch(ph % schedule.period, branches,
+                                      params, grads, opt_state)
+
+            inner = jax.shard_map(
+                body, mesh=mesh,
+                in_specs=(specs, specs, opt_specs, P()),
+                out_specs=(specs, opt_specs), check_vma=False)
+            return inner(params, grads, opt_state,
+                         jnp.asarray(phase, jnp.int32))
+
+        return update
+
+    raise ValueError(f"unknown gossip mode {mode!r}")
 
 
 def gossip_bytes_per_step(replica_bytes: int, dp: int, model_shards: int = 1) -> dict:

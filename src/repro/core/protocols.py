@@ -131,7 +131,6 @@ def make_protocol(
     num_rotations: int = 2,
     alpha: float = 0.5,
     mode: str = "static",
-    fused: bool = False,
     mix_impl: Callable | None = None,
     packed_layout: BucketLayout | None = None,
     seed: int = 0,
@@ -142,7 +141,7 @@ def make_protocol(
     parameter representation (leading axis sharded over ``data_axes``).
     With ``packed_layout``, params are core.buckets.PackedParams and the
     gossip mix runs the bucketed engine (one ppermute + in-place mix per
-    persistent bucket) instead of the per-leaf or fused paths.
+    persistent bucket) instead of the per-leaf path.
     """
     if name not in PROTOCOLS:
         raise ValueError(f"unknown protocol {name!r}; options {PROTOCOLS}")
@@ -160,8 +159,7 @@ def make_protocol(
                                          mode=mode, mix_impl=mix_impl)
         else:
             mix = make_gossip_mix(mesh, data_axes, schedule, param_specs,
-                                  alpha=alpha, mode=mode, fused=fused,
-                                  mix_impl=mix_impl)
+                                  alpha=alpha, mode=mode, mix_impl=mix_impl)
     if dp > 1 and name == "gossip_async":
         if packed_layout is not None:
             mix = make_packed_async_gossip_mix(

@@ -1,8 +1,11 @@
 # Pallas TPU kernels for the compute hot-spots (validated interpret=True on
 # CPU; see tests/test_kernels.py for the shape/dtype sweeps vs ref.py):
 #   gossip_mix      — the paper's per-step (w + w_recv)/2 fused elementwise
+#   fused_update    — single-sweep fused mix+apply (gossip arrival mix +
+#                     SGD/AdamW/LARS update, one HBM pass per bucket)
 #   ssm_scan        — chunked Mamba selective scan (falcon-mamba / jamba)
 #   flash_attention — blocked causal attention w/ online softmax + windows
-from .ops import (INTERPRET, flash_mha, gossip_mix_bucket, gossip_mix_flat,
+from .ops import (INTERPRET, flash_mha, fused_adamw_bucket, fused_lars_bucket,
+                  fused_sgd_bucket, gossip_mix_bucket, gossip_mix_flat,
                   gossip_mix_tree, ssm_scan)
 from . import ref

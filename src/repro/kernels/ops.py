@@ -15,13 +15,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from .flash_attention import flash_attention
+from .fused_update import (fused_adamw_1d, fused_adamw_ref, fused_lars_1d,
+                           fused_lars_ref, fused_sgd_1d, fused_sgd_ref)
 from .gossip_mix import LANE, gossip_mix_1d, gossip_mix_2d
 from .ssm_scan import ssm_scan_chunked
 
 PyTree = Any
 
 __all__ = ["INTERPRET", "gossip_mix_flat", "gossip_mix_tree",
-           "gossip_mix_bucket", "ssm_scan", "flash_mha"]
+           "gossip_mix_bucket", "fused_sgd_bucket", "fused_adamw_bucket",
+           "fused_lars_bucket", "ssm_scan", "flash_mha"]
 
 
 def _default_interpret() -> bool:
@@ -66,6 +69,65 @@ def gossip_mix_bucket(a: jnp.ndarray, b: jnp.ndarray,
     out = gossip_mix_2d(a.reshape(-1, LANE), b.reshape(-1, LANE), alpha=alpha,
                         interpret=INTERPRET, donate=not INTERPRET)
     return out.reshape(a.shape)
+
+
+def _fused_impl(impl: Optional[str]) -> str:
+    """Backend choice for the fused mix+apply update kernels.
+
+    ``None`` (auto): the Pallas kernel on TPU (with buffer donation), the jnp
+    twin elsewhere — same math, XLA-fused into one sweep, without
+    interpret-mode overhead in the CPU hot loop.  ``"pallas"`` forces the
+    kernel (interpret mode off-TPU — the validation path), ``"jnp"`` forces
+    the twin.
+    """
+    if impl is None:
+        return "jnp" if INTERPRET else "pallas"
+    if impl not in ("pallas", "jnp"):
+        raise ValueError(f"unknown fused-update impl {impl!r}")
+    return impl
+
+
+def fused_sgd_bucket(p, g, partner, mom, *, lr, alpha=0.5, momentum=0.9,
+                     weight_decay=0.0, impl: Optional[str] = None):
+    """Single-sweep fused mix+SGD over one persistent gossip bucket:
+    ``mixed = (1-alpha)*p + alpha*partner`` then the SGD-momentum update at
+    the mixed point, one read + one write pass, donation-friendly.  Accepts
+    any leading axes (the sharded replica axis) over the flat bucket dim and
+    ragged (non-LANE) buffers via the kernel's tail epilogue."""
+    if _fused_impl(impl) == "jnp":
+        return fused_sgd_ref(p, g, partner, mom, lr=lr, alpha=alpha,
+                             momentum=momentum, weight_decay=weight_decay)
+    return fused_sgd_1d(p, g, partner, mom, lr=lr, alpha=alpha,
+                        momentum=momentum, weight_decay=weight_decay,
+                        interpret=INTERPRET, donate=not INTERPRET)
+
+
+def fused_adamw_bucket(p, g, partner, m, v, *, lr, c1, c2, alpha=0.5, b1=0.9,
+                       b2=0.95, eps=1e-8, weight_decay=0.0,
+                       impl: Optional[str] = None):
+    """Single-sweep fused mix+AdamW over one bucket (see fused_sgd_bucket)."""
+    if _fused_impl(impl) == "jnp":
+        return fused_adamw_ref(p, g, partner, m, v, lr=lr, c1=c1, c2=c2,
+                               alpha=alpha, b1=b1, b2=b2, eps=eps,
+                               weight_decay=weight_decay)
+    return fused_adamw_1d(p, g, partner, m, v, lr=lr, c1=c1, c2=c2,
+                          alpha=alpha, b1=b1, b2=b2, eps=eps,
+                          weight_decay=weight_decay, interpret=INTERPRET,
+                          donate=not INTERPRET)
+
+
+def fused_lars_bucket(p, g, partner, mom, row_scale, *, lr, alpha=0.5,
+                      momentum=0.9, weight_decay=0.0,
+                      impl: Optional[str] = None):
+    """Single-sweep fused mix+LARS over one bucket, with the per-row trust
+    scale from the norm prepass (see optim.lars's fused backend)."""
+    if _fused_impl(impl) == "jnp":
+        return fused_lars_ref(p, g, partner, mom, row_scale, lr=lr,
+                              alpha=alpha, momentum=momentum,
+                              weight_decay=weight_decay)
+    return fused_lars_1d(p, g, partner, mom, row_scale, lr=lr, alpha=alpha,
+                         momentum=momentum, weight_decay=weight_decay,
+                         interpret=INTERPRET, donate=not INTERPRET)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "block_d"))

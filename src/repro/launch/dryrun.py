@@ -70,7 +70,7 @@ def _cost_summary(compiled) -> Dict[str, float]:
 
 
 def run_one(arch: str, shape: str, *, multi_pod: bool, protocol: str = "gossip",
-            gossip_fused: bool = False, num_rotations: int = 2,
+            num_rotations: int = 2,
             remat: bool = True, remat_policy=None, ssm_scan: str = "assoc",
             dist_mode: str = None, topology: str = "dissemination",
             verbose: bool = True) -> Dict[str, Any]:
@@ -105,7 +105,6 @@ def run_one(arch: str, shape: str, *, multi_pod: bool, protocol: str = "gossip",
             cfg, dist, optimizer, state_shapes=state_shapes,
             state_axes=state_axes, batch_shapes=batch_shapes,
             protocol=protocol, topology=topology,
-            gossip_fused=gossip_fused,
             num_rotations=num_rotations, remat=remat,
             remat_policy=remat_policy, ssm_scan_impl=ssm_impl)
         fn = bundle.jitted(phase=0, donate=True)
@@ -183,7 +182,6 @@ def main() -> None:
     ap.add_argument("--shape", default="all")
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
     ap.add_argument("--protocol", default="gossip")
-    ap.add_argument("--gossip-fused", action="store_true")
     ap.add_argument("--num-rotations", type=int, default=2)
     ap.add_argument("--no-remat", action="store_true")
     ap.add_argument("--ssm-scan", default="assoc", choices=["assoc", "chunked"])
@@ -215,7 +213,6 @@ def main() -> None:
                 try:
                     rec = run_one(arch, shape, multi_pod=multi,
                                   protocol=args.protocol,
-                                  gossip_fused=args.gossip_fused,
                                   num_rotations=args.num_rotations,
                                   remat=not args.no_remat,
                                   remat_policy=args.remat_policy,

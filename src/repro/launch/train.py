@@ -47,6 +47,12 @@ def main() -> None:
                     help="bucketed persistent-buffer gossip engine: params "
                     "packed once into LANE-aligned buckets, one ppermute + "
                     "in-place mix per bucket per step")
+    ap.add_argument("--fused-update", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="single-sweep fused mix+apply update engine (one "
+                    "HBM pass per bucket per step; default: on for --packed "
+                    "runs, --no-fused-update restores the mix-then-apply "
+                    "composition)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config on the local device mesh")
     ap.add_argument("--multi-pod", action="store_true")
@@ -81,7 +87,7 @@ def main() -> None:
         cfg, dist, opt, state_shapes=state_shapes, state_axes=state_axes,
         batch_shapes=batch_shapes, protocol=args.protocol,
         topology=args.topology, num_rotations=args.num_rotations,
-        gossip_packed=args.packed,
+        gossip_packed=args.packed, fused_update=args.fused_update,
         remat=not (args.smoke or len(jax.devices()) == 1))
     state, _ = init_train_state(jax.random.key(0), cfg, dist, opt,
                                 packed=args.packed, layout=bundle.layout,

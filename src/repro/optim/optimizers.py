@@ -33,6 +33,24 @@ class Optimizer:
     # ``PackedParams.unpack()`` view — set True to run under the bucketed
     # gossip engine anyway.
     packed_aware: bool = False
+    # --- fused mix+apply backend (kernels/fused_update.py) -----------------
+    # State keys (beyond "step") holding the per-param moment buffers, in
+    # the order ``fused_update`` takes and returns them.
+    fused_moments: Tuple[str, ...] = ()
+    # Bucket-level single-sweep update:
+    #   fused_update(bucket_idx, param, grad, mix_partner, moments,
+    #                *, step, alpha, layout=None, impl=None)
+    #       -> (param', moments')
+    # computing the gossip arrival mix (1-alpha)*param + alpha*mix_partner
+    # followed by this optimizer's update at the mixed point, in ONE pass
+    # over the bucket.  ``mix_partner=None`` (or alpha == 0) is the pure
+    # local update.  ``moments`` is a tuple matching ``fused_moments`` (an
+    # entry may be None, e.g. momentum-free sgd).  ``step`` is the int32
+    # step counter (drives the lr schedule / bias corrections); ``layout``
+    # the core.buckets.BucketLayout (needed by norm-based backends);
+    # ``impl`` the kernel backend override (see kernels.ops).  None when
+    # the optimizer has no fused backend.
+    fused_update: Callable | None = None
 
 
 def sgd(schedule: Schedule | float, momentum: float = 0.9,
@@ -61,7 +79,75 @@ def sgd(schedule: Schedule | float, momentum: float = 0.9,
             params, grads)
         return params, {"step": state["step"] + 1, "mom": None}
 
-    return Optimizer(init, update)
+    def fused_update(bucket_idx, p, g, partner, moments, *, step, alpha,
+                     layout=None, impl=None):
+        from repro.kernels import fused_sgd_bucket
+        (mom,) = moments
+        new_p, new_m = fused_sgd_bucket(
+            p, g, partner, mom, lr=sched(step), alpha=alpha,
+            momentum=momentum, weight_decay=weight_decay, impl=impl)
+        return new_p, (new_m,)
+
+    return Optimizer(init, update, fused_moments=("mom",),
+                     fused_update=fused_update)
+
+
+def _lars_row_scale(layout, bucket_idx: int, p, g, partner, *, alpha: float,
+                    weight_decay: float, trust_coef: float, eps: float):
+    """LARS norm prepass for one bucket: per-layer trust ratios expanded to
+    one fp32 scale per (row, 128) tile.
+
+    Reads the mixed params ``(1-alpha)*p + alpha*partner`` (materialized to
+    the bucket dtype, matching the standalone mix the unfused path would
+    run) and the grads through the layout's static slot table — the exact
+    slices ``PackedParams.unpack()`` serves — and computes
+    ``trust = trust_coef * ||w|| / (||g + wd*w|| + wd*||w|| + eps)`` per
+    layer, PER REPLICA ROW (each rank owns a distinct model).  Slot offsets
+    are LANE-aligned, so every row belongs to exactly one slot; padding rows
+    get scale 1.0 (their params/grads/moments are identically zero).
+    """
+    import numpy as np
+
+    lane = layout.lane
+    n = int(p.shape[-1])
+    slots = sorted((s for s in layout.slots if s.bucket == bucket_idx),
+                   key=lambda s: s.offset)
+    rows = n // lane
+    row_map = np.full((rows,), len(slots), np.int32)  # default: padding
+    for k, s in enumerate(slots):
+        row_map[s.offset // lane: -(-(s.offset + s.size) // lane)] = k
+    row_map = jnp.asarray(row_map)
+
+    def one_replica(pr, gr, br):
+        trusts = []
+        for s in slots:
+            pf = jax.lax.slice_in_dim(pr, s.offset, s.offset + s.size
+                                      ).astype(jnp.float32)
+            if br is not None and alpha != 0.0:
+                bf = jax.lax.slice_in_dim(br, s.offset, s.offset + s.size
+                                          ).astype(jnp.float32)
+                pf = (pf * (1.0 - alpha) + bf * alpha
+                      ).astype(pr.dtype).astype(jnp.float32)
+            gf = jax.lax.slice_in_dim(gr, s.offset, s.offset + s.size
+                                      ).astype(jnp.float32)
+            if weight_decay:
+                gf = gf + weight_decay * pf
+            wn = jnp.linalg.norm(pf.reshape(-1))
+            gn = jnp.linalg.norm(gf.reshape(-1))
+            trusts.append(jnp.where(
+                (wn > 0) & (gn > 0),
+                trust_coef * wn / (gn + weight_decay * wn + eps), 1.0))
+        table = jnp.stack(trusts + [jnp.float32(1.0)])
+        return table[row_map]
+
+    lead = p.shape[:-1]
+    pf2, gf2 = p.reshape((-1, n)), g.reshape((-1, n))
+    if partner is not None and alpha != 0.0:
+        bf2 = partner.reshape((-1, n))
+        scale = jax.vmap(one_replica)(pf2, gf2, bf2)
+    else:
+        scale = jax.vmap(lambda a, b: one_replica(a, b, None))(pf2, gf2)
+    return scale.reshape(lead + (rows,))
 
 
 def lars(schedule: Schedule | float, momentum: float = 0.9,
@@ -118,7 +204,31 @@ def lars(schedule: Schedule | float, momentum: float = 0.9,
             new_mom = PackedParams(layout.pack(new_mom), layout)
         return new_params, {"step": state["step"] + 1, "mom": new_mom}
 
-    return Optimizer(init, update, elementwise=False, packed_aware=True)
+    def fused_update(bucket_idx, p, g, partner, moments, *, step, alpha,
+                     layout=None, impl=None):
+        """Two-phase fused LARS: a norm prepass reads the param/grad slices
+        of THIS bucket through the layout's static slot table (the same
+        slices ``PackedParams.unpack()`` serves) and produces one trust
+        scalar per layer — computed per replica row, the distributed
+        semantics (each rank owns a distinct model, paper §4) — expanded to
+        a per-(row, 128)-tile scale; then the single-sweep kernel applies
+        mix + momentum + trust-scaled step.  Unlike the tree-level packed
+        update there is NO per-step re-pack concatenate."""
+        from repro.kernels import fused_lars_bucket
+        if layout is None:
+            raise ValueError("lars.fused_update needs the BucketLayout for "
+                             "its per-layer norm prepass")
+        (mom,) = moments
+        scale = _lars_row_scale(
+            layout, bucket_idx, p, g, partner, alpha=alpha,
+            weight_decay=weight_decay, trust_coef=trust_coef, eps=eps)
+        new_p, new_m = fused_lars_bucket(
+            p, g, partner, mom, scale, lr=sched(step), alpha=alpha,
+            momentum=momentum, weight_decay=weight_decay, impl=impl)
+        return new_p, (new_m,)
+
+    return Optimizer(init, update, elementwise=False, packed_aware=True,
+                     fused_moments=("mom",), fused_update=fused_update)
 
 
 def adamw(schedule: Schedule | float, b1: float = 0.9, b2: float = 0.95,
@@ -149,4 +259,16 @@ def adamw(schedule: Schedule | float, b1: float = 0.9, b2: float = 0.95,
         params = jax.tree.map(upd, params, m, v)
         return params, {"step": step, "m": m, "v": v}
 
-    return Optimizer(init, update)
+    def fused_update(bucket_idx, p, g, partner, moments, *, step, alpha,
+                     layout=None, impl=None):
+        from repro.kernels import fused_adamw_bucket
+        m_, v_ = moments
+        stepf = (step + 1).astype(jnp.float32)
+        new_p, new_m, new_v = fused_adamw_bucket(
+            p, g, partner, m_, v_, lr=sched(step),
+            c1=1 - b1 ** stepf, c2=1 - b2 ** stepf, alpha=alpha, b1=b1,
+            b2=b2, eps=eps, weight_decay=weight_decay, impl=impl)
+        return new_p, (new_m, new_v)
+
+    return Optimizer(init, update, fused_moments=("m", "v"),
+                     fused_update=fused_update)

@@ -24,6 +24,27 @@ with the whole forward/backward instead of exposing it after the update.
 ``phase`` (the gossip schedule position) is STATIC by default: the launcher
 keeps ``schedule.period`` compiled variants — see core/gossip.py for the
 rationale and the dynamic lax.switch alternative.
+
+**Fused mix+apply** (default for packed states whose optimizer exposes a
+``fused_update`` backend): the gossip mix and the optimizer update collapse
+into ONE single-sweep kernel per bucket (kernels/fused_update.py via
+core.gossip.make_packed_fused_update / core.async_gossip.
+make_packed_fused_async_update), so the update path makes one fused read
+pass and one fused write pass over the parameter state instead of the mix
+pass plus 2-3 optimizer passes.  The sync-gossip fused step dispatches
+``ppermute(params)`` at the top of the program (partner's pre-update params
+— the GoSGD-style combined update; the wire overlaps the whole fwd/bwd) and
+non-gossip phases run the same kernel with alpha=0, keeping one compiled
+step body shape per phase.
+
+NOTE the fused default changes the dp>1 gossip ALGEBRA, not just its cost:
+the partner term is one update staler than the PR-1 synchronous
+post-update average (the same staleness §5's asynchrony embraces — the
+mixing matrix, mean preservation, and diffusion analysis are unchanged),
+and gradients are evaluated at the pre-mix params.  At dp == 1 (and for
+agd/every_logp/none) the fused step is bit-identical to the unfused one.
+``fused_update=False`` keeps the PR-1/2 mix-then-apply composition
+bit-for-bit at any dp.
 """
 from __future__ import annotations
 
@@ -50,7 +71,7 @@ __all__ = ["TrainStepBundle", "make_train_step_bundle", "init_train_state"]
 
 class TrainStepBundle:
     def __init__(self, *, step_fn, state_specs, batch_specs, protocol, dist,
-                 cfg, optimizer, layout=None):
+                 cfg, optimizer, layout=None, fused=False):
         self.step_fn = step_fn          # (state, batch, *, phase:int static)
         self.state_specs = state_specs
         self.batch_specs = batch_specs
@@ -59,6 +80,7 @@ class TrainStepBundle:
         self.cfg = cfg
         self.optimizer = optimizer
         self.layout = layout            # BucketLayout when gossip_packed
+        self.fused = fused              # single-sweep fused mix+apply engine
 
     def jitted(self, phase: int, donate: bool = True):
         fn = functools.partial(self.step_fn, phase=phase)
@@ -132,9 +154,10 @@ def make_train_step_bundle(
     topology: str = "dissemination",
     num_rotations: int = 2,
     gossip_mode: str = "static",
-    gossip_fused: bool = False,
     gossip_packed: bool = False,
     gossip_alpha: float = 0.5,
+    fused_update: Optional[bool] = None,
+    fused_impl: Optional[str] = None,
     mix_impl: Optional[Callable] = None,
     rotate_samples: Optional[bool] = None,
     remat: bool = True,
@@ -153,7 +176,15 @@ def make_train_step_bundle(
     one ppermute + in-place Pallas mix per bucket. ELEMENTWISE optimizers
     (sgd, adamw) are packed-transparent; norm-based optimizers must declare
     ``packed_aware`` and read their per-leaf norms through the
-    ``PackedParams.unpack()`` view (lars does)."""
+    ``PackedParams.unpack()`` view (lars does).
+
+    ``fused_update`` (default None = auto: on when packed and the optimizer
+    exposes a ``fused_update`` backend) collapses mix + optimizer update
+    into one single-sweep kernel per bucket; at dp > 1 this also shifts the
+    gossip partner term one update staler (GoSGD-style combined update) —
+    see the module docstring, and pass ``fused_update=False`` to reproduce
+    PR-1/2 trajectories exactly.  ``fused_impl`` forces the kernel backend
+    ("pallas"/"jnp", see kernels.ops)."""
     mesh = dist.mesh
     if rotate_samples is None:
         rotate_samples = protocol in ("gossip", "gossip_async")
@@ -187,11 +218,40 @@ def make_train_step_bundle(
             from repro.kernels import gossip_mix_bucket
             mix_impl = gossip_mix_bucket
 
+    if fused_update is None:
+        fused_update = gossip_packed and optimizer.fused_update is not None
+    if fused_update and not gossip_packed:
+        raise ValueError("fused_update needs the bucketed engine: pass "
+                         "gossip_packed=True")
+    if fused_update and optimizer.fused_update is None:
+        raise ValueError(
+            "fused_update=True but this optimizer has no fused backend; "
+            "use sgd/adamw/lars or fused_update=False")
+
     proto = make_protocol(
         protocol, mesh, dist.dp_axes, param_specs,
         topology=topology, num_rotations=num_rotations, alpha=gossip_alpha,
-        mode=gossip_mode, fused=gossip_fused, mix_impl=mix_impl,
+        mode=gossip_mode, mix_impl=mix_impl,
         packed_layout=layout, seed=seed)
+
+    fused_eng = None
+    if fused_update:
+        from repro.core.async_gossip import make_packed_fused_async_update
+        from repro.core.gossip import make_packed_fused_update
+        if proto.carries_inbox:
+            fused_eng = make_packed_fused_async_update(
+                mesh, dist.dp_axes, proto.schedule, layout, optimizer,
+                alpha=gossip_alpha, mode=gossip_mode, impl=fused_impl)
+        elif protocol == "gossip" and proto.dp > 1:
+            fused_eng = make_packed_fused_update(
+                mesh, dist.dp_axes, proto.schedule, layout, optimizer,
+                alpha=gossip_alpha, mode=gossip_mode, impl=fused_impl)
+        else:
+            # non-gossip phases (agd / every_logp / none) and dp == 1 run
+            # the same single-sweep kernel with alpha = 0
+            fused_eng = make_packed_fused_update(
+                mesh, dist.dp_axes, None, layout, optimizer,
+                alpha=0.0, mode=gossip_mode, impl=fused_impl)
 
     if proto.carries_inbox:
         # the staleness-1 inbox rides in the train state with the params'
@@ -222,18 +282,37 @@ def make_train_step_bundle(
             lambda x, s: jax.lax.with_sharding_constraint(x, dist.sharding(s)),
             batch, batch_specs)
         new_inbox = None
-        if proto.carries_inbox:
-            # staleness-1 arrival: mix last step's update against the inbox,
-            # then re-dispatch immediately. The ppermute's result is consumed
-            # only as the NEXT step's inbox, so the wire transfer overlaps
-            # the entire forward/backward below.
-            params, new_inbox = proto.comm_params(params, phase,
-                                                  inbox=state["inbox"])
-        (_, metrics), grads = grad_fn(params, batch)
-        grads = proto.comm_grads(grads, phase)
-        new_params, new_opt = optimizer.update(params, grads, state["opt"])
-        if not proto.carries_inbox:
-            new_params = proto.comm_params(new_params, phase)
+        if fused_eng is not None:
+            # fused mix+apply: grads at the incoming params, then ONE
+            # single-sweep kernel per bucket does arrival mix + optimizer
+            # update (the engine dispatches its ppermute at the program top,
+            # so the wire overlaps this fwd/bwd).
+            (_, metrics), grads = grad_fn(params, batch)
+            grads = proto.comm_grads(grads, phase)
+            if proto.carries_inbox:
+                new_params, new_opt, new_inbox = fused_eng(
+                    params, grads, state["inbox"], state["opt"], phase)
+            else:
+                new_params, new_opt = fused_eng(params, grads, state["opt"],
+                                                phase)
+                if proto.name == "every_logp":
+                    # the periodic model all-reduce stays a separate
+                    # (amortized-O(1/log p)) pass
+                    new_params = proto.comm_params(new_params, phase)
+        else:
+            if proto.carries_inbox:
+                # staleness-1 arrival: mix last step's update against the
+                # inbox, then re-dispatch immediately. The ppermute's result
+                # is consumed only as the NEXT step's inbox, so the wire
+                # transfer overlaps the entire forward/backward below.
+                params, new_inbox = proto.comm_params(params, phase,
+                                                      inbox=state["inbox"])
+            (_, metrics), grads = grad_fn(params, batch)
+            grads = proto.comm_grads(grads, phase)
+            new_params, new_opt = optimizer.update(params, grads,
+                                                   state["opt"])
+            if not proto.carries_inbox:
+                new_params = proto.comm_params(new_params, phase)
         new_params = jax.tree.map(
             lambda x, s: jax.lax.with_sharding_constraint(x, dist.sharding(s)),
             new_params, param_specs)
@@ -247,7 +326,7 @@ def make_train_step_bundle(
     return TrainStepBundle(
         step_fn=train_step, state_specs=state_specs, batch_specs=batch_specs,
         protocol=proto, dist=dist, cfg=cfg, optimizer=optimizer,
-        layout=layout)
+        layout=layout, fused=fused_update)
 
 
 def _check_packable(mesh, param_specs: PyTree) -> None:

@@ -1,8 +1,9 @@
 """Bucketed gossip engine: layout invariants, pack/unpack roundtrip,
 PackedParams-as-pytree behavior, checkpoint format stability, packed-vs-leaf
 training equivalence, and (subprocess, 8 forced host devices) mix equivalence
-bucketed == per-leaf == old-fused == simulator across every schedule phase of
-p=8 for bf16 and fp32 with odd leaf sizes."""
+bucketed == per-leaf == simulator across every schedule phase of p=8 for
+bf16 and fp32 with odd leaf sizes.  (The retired ``fused=True`` concat path
+lives on only as the historical baseline in benchmarks/kernels_bench.py.)"""
 import dataclasses
 import os
 import subprocess
@@ -207,9 +208,10 @@ def test_lars_trains_packed_and_matches_leaf_training():
 
 def test_packed_trainer_donates_state_buffers():
     """Packed states donate into the step (Trainer default): after the first
-    step the initial state's bucket buffers are consumed — the per-step mix
-    writes in place instead of double-allocating. Per-leaf states keep
-    donation off and stay live."""
+    step the initial state's bucket buffers — params AND optimizer moments,
+    which the fused mix+apply kernel aliases in place — are consumed: the
+    per-step update writes onto the previous step's buffers instead of
+    double-allocating. Per-leaf states keep donation off and stay live."""
     import dataclasses
     from repro.configs import get_config
     from repro.data import ShardedTokenDataset
@@ -226,24 +228,35 @@ def test_packed_trainer_donates_state_buffers():
     opt = sgd(0.3, momentum=0.9)
     ss, sa, bs = train_input_specs(cfg, dist, 24, 4, opt)
     for packed in (True, False):
-        bundle = make_train_step_bundle(
-            cfg, dist, opt, state_shapes=ss, state_axes=sa, batch_shapes=bs,
-            protocol="gossip", remat=False, gossip_packed=packed)
-        state, _ = init_train_state(jax.random.key(0), cfg, dist, opt,
-                                    packed=packed, layout=bundle.layout)
-        initial_leaves = jax.tree.leaves(state["params"])
-        ds = ShardedTokenDataset(vocab=cfg.vocab, seq_len=24, n_shards=1,
-                                 batch_per_shard=4, seed=0)
-        tr = Trainer(bundle, state, ds, log_every=0)
-        assert tr.donate == packed
-        tr.run(2)
-        deleted = [leaf.is_deleted() for leaf in initial_leaves]
-        if packed:
-            assert all(deleted), "donated buckets must not stay live"
-            live = jax.tree.leaves(tr.state["params"])
-            assert not any(leaf.is_deleted() for leaf in live)
-        else:
-            assert not any(deleted)
+        for fused in ((True, False) if packed else (False,)):
+            bundle = make_train_step_bundle(
+                cfg, dist, opt, state_shapes=ss, state_axes=sa,
+                batch_shapes=bs, protocol="gossip", remat=False,
+                gossip_packed=packed, fused_update=fused)
+            assert bundle.fused == fused
+            state, _ = init_train_state(jax.random.key(0), cfg, dist, opt,
+                                        packed=packed, layout=bundle.layout)
+            initial_params = jax.tree.leaves(state["params"])
+            initial_moments = jax.tree.leaves(state["opt"]["mom"])
+            ds = ShardedTokenDataset(vocab=cfg.vocab, seq_len=24, n_shards=1,
+                                     batch_per_shard=4, seed=0)
+            tr = Trainer(bundle, state, ds, log_every=0)
+            assert tr.donate == packed
+            tr.run(2)
+            deleted = [leaf.is_deleted() for leaf in initial_params]
+            mom_deleted = [leaf.is_deleted() for leaf in initial_moments]
+            if packed:
+                assert all(deleted), "donated buckets must not stay live"
+                # the donated optimizer-state buffers must be reused too:
+                # the fused kernel writes moments in place, so the initial
+                # moment buckets cannot survive the first step
+                assert all(mom_deleted), \
+                    "donated moment buckets must not stay live"
+                live = jax.tree.leaves(
+                    (tr.state["params"], tr.state["opt"]["mom"]))
+                assert not any(leaf.is_deleted() for leaf in live)
+            else:
+                assert not any(deleted) and not any(mom_deleted)
 
 
 _EQUIV_SCRIPT = r"""
@@ -274,42 +287,35 @@ for dtype, tol in ((jnp.float32, 0.0), (jnp.bfloat16, 2e-2)):
         mesh, ("data",), sched, layout,
         mix_impl=lambda a, b, al: gossip_mix_bucket(a, b, al))
     lmix = make_gossip_mix(mesh, ("data",), sched, specs)
-    fmix = make_gossip_mix(mesh, ("data",), sched, specs, fused=True)
     got_p = PackedParams.pack(tree, layout)
-    got_l = dict(tree); got_f = dict(tree); want = dict(tree)
+    got_l = dict(tree); want = dict(tree)
     for t in range(sched.period):  # every phase of the p=8 schedule
         got_p = pmix(got_p, t)
         got_l = lmix(got_l, t)
-        got_f = fmix(got_f, t)
         want = gossip_mix_sim(want, jnp.asarray(sched.recv_from(t)))
         up = got_p.unpack()
         for k in tree:
             a = np.asarray(up[k], np.float32)
             w = np.asarray(want[k], np.float32)
             l = np.asarray(got_l[k], np.float32)
-            f = np.asarray(got_f[k], np.float32)
-            if tol == 0.0:  # fp32: bit-identical across all three engines
+            if tol == 0.0:  # fp32: bit-identical across both engines
                 np.testing.assert_array_equal(a, w)
                 np.testing.assert_array_equal(l, w)
-                np.testing.assert_array_equal(f, w)
             else:
                 np.testing.assert_allclose(a, w, rtol=tol, atol=tol)
                 np.testing.assert_allclose(l, w, rtol=tol, atol=tol)
-                np.testing.assert_allclose(f, w, rtol=tol, atol=tol)
     print(f"ok dtype={np.dtype(dtype).name} phases={sched.period}")
 
 # the packed mix step must contain no per-step pack/unpack
 jx = str(jax.make_jaxpr(lambda q: pmix(q, 0))(got_p))
 assert "concatenate" not in jx, "packed mix has a per-step concat"
-jf = str(jax.make_jaxpr(lambda q: fmix(q, 0))(dict(tree)))
-assert "concatenate" in jf
 print("ok jaxpr no-concat")
 print("ALL_OK")
 """
 
 
 @pytest.mark.slow
-def test_bucketed_equals_leaf_equals_fused_all_phases():
+def test_bucketed_equals_leaf_all_phases():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     r = subprocess.run([sys.executable, "-c", _EQUIV_SCRIPT], env=env,

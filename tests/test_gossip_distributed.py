@@ -28,18 +28,16 @@ specs = {"w": P("data", "model", None)}
 params = {"w": jax.device_put(w, NamedSharding(mesh, P("data", "model", None)))}
 
 for mode in ("static", "dynamic"):
-    for fused in (False, True):
-        mix = make_gossip_mix(mesh, ("data",), sched, specs, mode=mode,
-                              fused=fused)
-        got = {"w": w}
-        got = jax.device_put(got, {"w": NamedSharding(mesh, specs["w"])})
-        want = {"w": w}
-        for t in range(sched.period + 2):
-            got = mix(got, t if mode == "static" else jnp.int32(t))
-            want = gossip_mix_sim(want, jnp.asarray(sched.recv_from(t)))
-        np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(want["w"]),
-                                   rtol=1e-5, atol=1e-6)
-        print(f"ok mode={mode} fused={fused}")
+    mix = make_gossip_mix(mesh, ("data",), sched, specs, mode=mode)
+    got = {"w": w}
+    got = jax.device_put(got, {"w": NamedSharding(mesh, specs["w"])})
+    want = {"w": w}
+    for t in range(sched.period + 2):
+        got = mix(got, t if mode == "static" else jnp.int32(t))
+        want = gossip_mix_sim(want, jnp.asarray(sched.recv_from(t)))
+    np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(want["w"]),
+                               rtol=1e-5, atol=1e-6)
+    print(f"ok mode={mode}")
 
 # ring shuffle: shard i moves to rank (i+1) % p
 batch = jnp.arange(p * 3 * 2, dtype=jnp.float32).reshape(p, 3, 2)
