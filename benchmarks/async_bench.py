@@ -40,8 +40,8 @@ import repro  # jax compat shims
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding
 from repro.core import (PackedParams, build_layout, build_schedule,
-                        make_packed_gossip_mix, make_packed_async_gossip_mix,
-                        packed_param_specs)
+                        init_inbox_ring, make_packed_gossip_mix,
+                        make_packed_async_gossip_mix, packed_param_specs)
 
 SMOKE = bool(int(sys.argv[1]))
 WIRE_S = 0.04 if SMOKE else 0.08       # emulated interconnect latency/step
@@ -86,11 +86,11 @@ def block(t):
 
 def warmup():
     # compile every phase variant + compute so timed loops measure steps
-    q = sh(params0); inbox = jax.tree.map(jnp.copy, q)
+    q = sh(params0); ring = init_inbox_ring(q, 1, p)
     for ph in range(sched.period):
         q = jit_sync[ph](q)
-        _, inbox = jit_async[ph](q, inbox)
-    block((q, inbox, compute(q)))
+        _, ring = jit_async[ph](q, ring)
+    block((q, ring, compute(q)))
 
 def run_sync():
     q = sh(params0)
@@ -104,14 +104,14 @@ def run_sync():
 
 def run_async():
     q = sh(params0)
-    inbox = jax.tree.map(jnp.copy, q)
+    ring = init_inbox_ring(q, 1, p)   # staleness-1: the PR-2 configuration
     t0 = time.perf_counter()
     for t in range(STEPS):
-        mixed, outbox = jit_async[t % sched.period](q, inbox)
+        mixed, outring = jit_async[t % sched.period](q, ring)
         q = compute(mixed)     # dispatched; runs while the wire settles
-        block(outbox)          # exchange data produced (mix program done)
+        block(outring)         # exchange data produced (mix program done)
         time.sleep(WIRE_S)     # wire latency overlaps compute(q) above
-        inbox = outbox         # lands as next step's inbox
+        ring = outring         # payload lands as the ring's newest slot
     block(q)
     return (time.perf_counter() - t0) / STEPS * 1e3
 

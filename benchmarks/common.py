@@ -12,9 +12,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import re
+
 from repro.configs import get_config
-from repro.core import (build_schedule, make_async_sim_train_step,
-                        make_sim_train_step, replicate)
+from repro.core import (build_schedule, init_inbox_ring,
+                        make_async_sim_train_step, make_sim_train_step,
+                        replicate)
 from repro.data import BigramTaskDataset
 from repro.models import lm_init, reduced
 from repro.optim import sgd
@@ -32,19 +35,34 @@ def tiny_lm_cfg(d_model=64, vocab=128):
                                compute_dtype="float32")
 
 
+def parse_async_protocol(protocol: str):
+    """``gossip_async[_k<K>][_drop<PCT>]`` -> (staleness, drop_rate) or None
+    for non-async protocols — the bounded-delay sweep naming used by the
+    ablation/straggler benches and examples/gossip_vs_agd.py (e.g.
+    ``gossip_async_k4_drop30`` = staleness-4 ring, 30% injected drops)."""
+    m = re.fullmatch(r"gossip_async(?:_k(\d+))?(?:_drop(\d+))?", protocol)
+    if not m:
+        return None
+    return int(m.group(1) or 1), int(m.group(2) or 0) / 100.0
+
+
 def make_replica_lm(p: int, protocol: str, *, lr=0.3, seed=0,
                     num_rotations=2, d_model=64, vocab=128):
-    """``gossip_async`` uses the staleness-1 step (core.simulate.
-    make_async_sim_train_step): step(opt_state, params, inbox, batch, t);
-    every other protocol keeps the 4-arg synchronous step."""
+    """``gossip_async*`` protocols (see ``parse_async_protocol``) use the
+    bounded-delay step (core.simulate.make_async_sim_train_step):
+    step(opt_state, params, ring, batch, t); every other protocol keeps the
+    4-arg synchronous step."""
     cfg = tiny_lm_cfg(d_model, vocab)
     params, _ = lm_init(jax.random.key(seed), cfg)
     loss_fn_full = make_loss_fn(cfg)
     loss_fn = lambda prms, batch: loss_fn_full(prms, batch)[0]
     sched = build_schedule(max(p, 2), num_rotations=num_rotations, seed=seed)
     opt = sgd(lr, momentum=0.9)
-    if protocol == "gossip_async":
-        step = make_async_sim_train_step(loss_fn, opt, sched)
+    async_kd = parse_async_protocol(protocol)
+    if async_kd is not None:
+        k, drop = async_kd
+        step = make_async_sim_train_step(loss_fn, opt, sched, staleness=k,
+                                         drop_rate=drop, drop_seed=seed)
     else:
         step = make_sim_train_step(loss_fn, opt, sched, protocol=protocol)
     params = replicate(params, p)
@@ -61,8 +79,9 @@ def run_replica_lm(p: int, protocol: str, steps: int, *, seq_len=32,
     cfg, step, params, opt_state, sched = make_replica_lm(
         p, protocol, lr=lr, seed=seed)
     task = BigramTaskDataset(cfg.vocab, seed=seed + 991)
-    is_async = protocol == "gossip_async"
-    inbox = jax.tree.map(jnp.copy, params) if is_async else None
+    async_kd = parse_async_protocol(protocol)
+    is_async = async_kd is not None
+    inbox = init_inbox_ring(params, async_kd[0], p) if is_async else None
 
     def batch_for(t):
         toks = np.stack([

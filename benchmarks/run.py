@@ -13,7 +13,10 @@ suite). Figure/table mapping:
     kernels_bench      — Pallas kernel plumbing micro-bench
     async_bench        — §5 async gossip: sync vs staleness-1 step time
     fused_update_bench — fused mix+apply vs mix-then-apply update engine
-    ablation_robustness— beyond-paper: grad-vs-model gossip, dropped exchanges
+    straggler_bench    — bounded-delay runtime: step time + drift vs
+                         staleness k and drop rate (skip-on-timeout)
+    ablation_robustness— beyond-paper: grad-vs-model gossip, dropped
+                         exchanges, staleness-k convergence
 
 ``--smoke`` shrinks iteration counts for CI (suites that accept it).
 """
@@ -32,6 +35,7 @@ SUITES = [
     "kernels_bench",
     "async_bench",
     "fused_update_bench",
+    "straggler_bench",
     "ablation_robustness",
 ]
 

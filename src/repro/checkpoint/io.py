@@ -12,18 +12,29 @@ writing, and restore re-packs after reading. The on-disk format is therefore
 identical between the packed and per-leaf engines — a packed run can restore
 a leaf checkpoint and vice versa.
 
-Asynchronous gossip state: the staleness-1 inbox (``state["inbox"]``, same
-structure as the params — PackedParams included) is just another state
-subtree, so it persists and re-packs through the same machinery; together
-with the step counter in the manifest (from which the gossip phase resumes:
-``phase = step % schedule.period``) an async run restores to the exact
-point in the exchange pipeline it left off — resumption is bit-deterministic
-(tests/test_async_gossip.py).
+Asynchronous gossip state: the staleness-k inbox ring (``state["inbox"]`` =
+``{"slots": (k param-shaped trees, oldest first), "valid": (dp, k) mask,
+"t": dispatch counter}`` — PackedParams slots included) is just another
+state subtree, so it persists and re-packs through the same machinery;
+together with the step counter in the manifest (from which the gossip phase
+resumes: ``phase = step % schedule.period``) an async run restores to the
+exact point in the exchange pipeline it left off — resumption is
+bit-deterministic (tests/test_async_gossip.py).
+
+Cross-staleness restore: a checkpoint written at one ring depth restores
+into a template of another. A shallower checkpoint (e.g. k=1 -> k=4 run) is
+**mask-padded**: its in-flight payloads stay oldest-first and the new back
+slots start invalid (a skip is always safe — the protocol's own drop
+semantics). A deeper checkpoint (k=4 -> k=1 run) is truncated to the oldest
+slots: the newer in-flight payloads are "lost on the wire", which gossip
+tolerates by design (§4.2). Legacy PR-2 checkpoints (a bare staleness-1
+inbox tree, no ring keys) restore as a one-slot ring with a valid mask.
 """
 from __future__ import annotations
 
 import json
 import os
+import re
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -34,6 +45,15 @@ from repro.core.buckets import PackedParams
 PyTree = Any
 
 __all__ = ["save_state", "restore_state", "checkpoint_exists", "read_manifest"]
+
+_RING_KEYS = frozenset(("slots", "valid", "t"))
+_SLOT_KEY_RE = re.compile(r"\['inbox'\]\['slots'\]\[(\d+)\]")
+
+
+def _is_ring(node) -> bool:
+    """True for an inbox-ring node (core.async_gossip.init_inbox_ring)."""
+    return (isinstance(node, dict) and set(node) == _RING_KEYS
+            and isinstance(node["slots"], (tuple, list)))
 
 
 def _is_packed(x) -> bool:
@@ -114,10 +134,50 @@ def save_state(path: str, state: PyTree, metadata: Optional[Dict] = None,
         json.dump(manifest, f, indent=1)
 
 
+def _ckpt_ring_depth(names) -> Optional[Tuple[int, bool]]:
+    """(slot count, legacy?) of the checkpoint's inbox, or None when the
+    checkpoint has no inbox subtree. ``legacy`` marks the PR-2 format: a
+    bare inbox tree with no ring keys (treated as a one-slot valid ring)."""
+    slot_idx = set()
+    has_inbox = False
+    for key in names:
+        if key.startswith("['inbox']"):
+            has_inbox = True
+            m = _SLOT_KEY_RE.match(key)
+            if m:
+                slot_idx.add(int(m.group(1)))
+    if not has_inbox:
+        return None
+    if not slot_idx:
+        return 1, True
+    return max(slot_idx) + 1, False
+
+
+def _adapt_ring(ring: Dict, k_t: int) -> Dict:
+    """Resize a restored (unpacked, host-side) inbox ring to depth ``k_t``:
+    mask-pad a shallower ring (new back slots carry copies of the newest
+    payload but start invalid — consumed as skips), truncate a deeper one to
+    its oldest slots (the newer in-flight payloads are dropped, which the
+    protocol tolerates by design)."""
+    slots, valid = list(ring["slots"]), np.asarray(ring["valid"])
+    k_c = len(slots)
+    if k_c < k_t:
+        pad = k_t - k_c
+        slots = slots + [jax.tree.map(np.copy, slots[-1]) for _ in range(pad)]
+        valid = np.concatenate(
+            [valid, np.zeros((valid.shape[0], pad), valid.dtype)], axis=1)
+    elif k_c > k_t:
+        slots = slots[:k_t]
+        valid = np.ascontiguousarray(valid[:, :k_t])
+    return {"slots": tuple(slots), "valid": valid, "t": ring["t"]}
+
+
 def restore_state(path: str, template: PyTree) -> Tuple[PyTree, Dict]:
     """Restore into the structure of ``template`` (shapes/dtypes validated).
     PackedParams nodes in the template are restored through their unpacked
-    leaf view and re-packed. Returns (state, manifest)."""
+    leaf view and re-packed; an inbox ring whose depth differs from the
+    template's is mask-padded / truncated (module docstring). Returns
+    (state, manifest)."""
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(path, "arrays.npz"))
@@ -125,6 +185,27 @@ def restore_state(path: str, template: PyTree) -> Tuple[PyTree, Dict]:
     arrays = {k: data[f"a{i}"] for i, k in enumerate(names)}
 
     packed_template = template
+    ring_adapt = None  # (target depth, ckpt depth, legacy?, dp)
+    if (isinstance(template, dict) and "inbox" in template
+            and _is_ring(template["inbox"])):
+        depth = _ckpt_ring_depth(names)
+        if depth is not None:
+            k_c, legacy = depth
+            ring_t = template["inbox"]
+            k_t = len(ring_t["slots"])
+            dp = int(np.shape(ring_t["valid"])[0])
+            if legacy:
+                # PR-2 on-disk format: the inbox is a bare param-shaped tree
+                template = dict(template, inbox=ring_t["slots"][0])
+                ring_adapt = (k_t, 1, True, dp)
+            elif k_c != k_t:
+                template = dict(template, inbox={
+                    "slots": tuple(ring_t["slots"][min(i, k_t - 1)]
+                                   for i in range(k_c)),
+                    "valid": np.zeros((dp, k_c), np.float32),
+                    "t": ring_t["t"],
+                })
+                ring_adapt = (k_t, k_c, False, dp)
     # abstract unpack: only shapes/dtypes are needed for validation — never
     # materialize a full unpacked copy of the packed state on device
     template = jax.eval_shape(_unpack_view, template)
@@ -144,4 +225,16 @@ def restore_state(path: str, template: PyTree) -> Tuple[PyTree, Dict]:
                              f"{arr.shape} vs {np.shape(leaf)}")
         out.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
     restored = jax.tree_util.tree_unflatten(treedef, out)
+    if ring_adapt is not None:
+        k_t, _, legacy, dp = ring_adapt
+        ring = restored["inbox"]
+        if legacy:
+            # the PR-2 inbox always mixed, so it restores as a VALID slot;
+            # its dispatch counter resumes from the manifest step (one mix
+            # per step, so t == step on the staleness-1 runtime)
+            ring = {"slots": (ring,),
+                    "valid": np.ones((dp, 1), np.float32),
+                    "t": np.asarray(int(manifest.get("step") or 0),
+                                    np.int32)}
+        restored = dict(restored, inbox=_adapt_ring(ring, k_t))
     return _pack_like(packed_template, restored), manifest

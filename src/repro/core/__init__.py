@@ -8,12 +8,13 @@ from .buckets import (BucketLayout, LeafSlot, PackedParams, build_layout,
                       packed_param_specs)
 from .gossip import (gossip_bytes_per_step, linear_pairs, make_gossip_mix,
                      make_packed_fused_update, make_packed_gossip_mix)
-from .async_gossip import (make_async_gossip_mix,
+from .async_gossip import (exchange_ok, inbox_ring_specs, init_inbox_ring,
+                           make_async_gossip_mix,
                            make_packed_async_gossip_mix,
                            make_packed_fused_async_update)
 from .protocols import PROTOCOLS, Protocol, make_protocol
 from .shuffle import RingShardRotation, make_ring_shuffle
 from .simulate import (allreduce_mean_sim, gossip_mix_sim,
-                       gossip_mix_sim_delayed, gossip_mix_sim_masked,
-                       make_async_sim_train_step, make_sim_train_step,
-                       replica_variance, replicate)
+                       gossip_mix_sim_delayed, gossip_mix_sim_delayed_k,
+                       gossip_mix_sim_masked, make_async_sim_train_step,
+                       make_sim_train_step, replica_variance, replicate)

@@ -1,51 +1,71 @@
-"""Asynchronous gossip runtime: staleness-1 inbox protocol (GossipGraD §5).
+"""Bounded-delay asynchronous gossip runtime: the staleness-k inbox ring
+(GossipGraD §4.2/§5).
 
-The paper's headline asynchrony is that the gossip exchange never sits on the
-critical path: each rank posts non-blocking sends of its model and keeps
-training, consuming whatever the partner sent *last* step. On a TPU mesh the
-same structure maps onto a persistent **inbox** carried in the train state:
+The paper's premise is that a gossip exchange is *not expected to be
+reliable or prompt*: a partner model that arrives late is still a valid
+diffusion step, and one that never arrives can simply be skipped without
+breaking the mixing analysis. PR 2 implemented the staleness-1 special case
+(one inbox slot, every exchange lands exactly one step late). This module
+generalizes that into a **bounded-delay runtime** where staleness is a
+parameter:
 
-    state entering step t:  (params u_{t-1},  inbox B_{t-1})
-    1. mixed = (1-alpha) * u_{t-1} + alpha * B_{t-1}     (arrival mix)
-    2. B_t   = ppermute(mixed, schedule row t)           (dispatch, async)
-    3. grads / optimizer update at ``mixed``  ->  u_t    (compute)
+    ring entering step t (k = staleness):
+        slots[0..k-1]   payloads dispatched at steps t-k .. t-1
+                        (slots[0] is the oldest — consumed this step)
+        valid[:, 0..k-1] per-slot landed/valid mask (1.0 / 0.0)
+        t               dispatch counter (drives the drop injection)
 
-The ppermute's result is consumed only as the *next* step's inbox, so nothing
-between the dispatch (2) and the end of the step depends on it: XLA emits a
-``collective-permute-start`` right after the mix and hoists the entire
-forward/backward/update between start and done — the wire transfer of step
-t's exchange overlaps step t's own compute, which in the unrolled timeline is
-the compute that *follows* the previous optimizer update. Communication cost
-on the critical path per step: one mix (pure FLOPs), zero exposed transfers.
+    one step:
+        1. a_eff  = alpha * valid[:, 0]                  (masked alpha)
+           mixed  = (1 - a_eff) * params + a_eff * slots[0]
+        2. payload = ppermute(mixed, schedule row t)      (dispatch, async)
+           ok      = exchange_ok(t, rank)                 (drop injection)
+        3. ring'   = slots[1:] + [payload],  valid' = [valid[:,1:], ok],
+           t' = t + 1
 
-Staleness is exactly 1: the inbox holds the partner's fully-mixed params from
-one step earlier (the partner's latest local update is the only thing
-missing). The exchange *pattern* at step t is the same schedule row t the
-synchronous protocol uses — consumption is simply one step late — so
-rotation, dissemination/hypercube diffusion, and the paper's mixing analysis
-carry over unchanged. The delayed-mix oracle ``core.simulate.
-gossip_mix_sim_delayed`` defines the reference semantics; the shard_map
-implementation here must match it bit-exactly (tests/test_async_gossip.py).
+    — i.e. the exchange dispatched at step t has k full steps of compute to
+    cross the wire before anything waits on it, and the FIFO queue
+    discipline keeps the ring position static inside jit (no dynamic
+    indexing: consuming is always ``slots[0]``, appending is structural).
 
-Bootstrap: a fresh run starts with ``inbox = copy(params)`` ("nothing
-received yet"), making step 0's arrival mix the identity and step 0's
-dispatch the first real exchange. Checkpoints persist the inbox (and the
-phase via the step counter), so resumed runs replay the identical sequence.
+**Skip-on-timeout**: a dropped or late exchange is expressed as mixing with
+alpha = 0 — the consumed slot's validity scales alpha, so the mixing-matrix
+row for a skipped rank degenerates to the identity row. Every row still
+sums to 1 (row-stochastic), so a constant consensus state is a fixed point
+under any drop pattern; with no drops the matrix is the same doubly
+stochastic (1-a)I + aP as the synchronous mix and the replica mean is
+preserved exactly. On a real mesh the validity would be set by the
+receive-timeout; on this container drops are *injected* by a deterministic
+integer hash of (dispatch step, receiver rank) — ``exchange_ok`` — shared
+bit-for-bit by the simulator oracle and the shard_map engines.
+
+Staleness-1 with zero drops reproduces PR 2/3 exactly: the ring has one
+slot, a_eff == alpha after the bootstrap, and every fp32 op sequence is
+unchanged (the masked-alpha kernels compute the same arithmetic with alpha
+read from a coefficient instead of baked in).
+
+Bootstrap: a fresh run starts with k copies of the params and ``valid = 0``
+("nothing received yet"): the first k arrival mixes are skips, and the
+exchange dispatched at step 0 is consumed at step k. Checkpoints persist
+the ring (slots + mask + t) like any state subtree; a checkpoint written at
+one staleness restores into another by mask-padding / truncation
+(checkpoint.io).
 
 Like the synchronous engine, two phase-selection modes exist: ``static``
 (one compiled step per schedule row — the production shape) and ``dynamic``
-(``lax.switch`` over all rows with a traced step index).
+(``lax.switch`` over all rows with a traced step index). The oracle is
+``core.simulate.gossip_mix_sim_delayed_k``; the shard_map implementations
+here must match it bit-exactly (tests/test_async_gossip.py).
 
-The **fused mix+apply engine** (``make_packed_fused_async_update``) goes one
-step further for packed states: the inbox is just the mix operand of the
-single-sweep fused update kernel (kernels/fused_update.py), so the arrival
-mix costs no standalone pass at all — one fused read + one fused write over
-each bucket per step, optimizer update included.
+The **fused mix+apply engine** (``make_packed_fused_async_update``) keeps
+PR 3's single-sweep property: the consumed slot is the mix operand of the
+fused update kernel and the masked alpha rides the kernel's coefficient
+block, so the skip costs no extra pass either.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Sequence, Tuple
+from typing import Any, Callable, Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -59,9 +79,92 @@ from .topology import GossipSchedule
 
 PyTree = Any
 
-__all__ = ["make_async_gossip_mix", "make_packed_async_gossip_mix",
+__all__ = ["exchange_ok", "init_inbox_ring", "inbox_ring_specs",
+           "make_async_gossip_mix", "make_packed_async_gossip_mix",
            "make_packed_fused_async_update"]
 
+
+# ------------------------------------------------------- drop-mask injection
+
+def _mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """splitmix32 finalizer over uint32 (wrapping arithmetic)."""
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+def exchange_ok(t, rank, seed: int = 0, rate: float = 0.0) -> jnp.ndarray:
+    """Emulated-wire drop injection: 1.0 when the exchange dispatched at
+    step ``t`` lands at receiver ``rank`` within its staleness-k deadline,
+    0.0 when it times out and must be skipped.
+
+    A deterministic integer hash (no jax.random machinery), so the
+    simulator oracle, the shard_map engines, and resumed runs agree
+    bit-for-bit — vectorized over ``rank`` or evaluated per device, the
+    uint32 lanes are independent and identical. ``rate`` is the marginal
+    drop probability; 0 disables injection (all-ones mask).
+    """
+    rank = jnp.asarray(rank)
+    if rate <= 0.0:
+        return jnp.ones(rank.shape, jnp.float32)
+    x = (jnp.asarray(t, jnp.uint32) * jnp.uint32(0x9E3779B9)
+         ^ rank.astype(jnp.uint32) * jnp.uint32(0x85EBCA6B)
+         ^ jnp.uint32(seed & 0xFFFFFFFF))
+    thresh = jnp.uint32(min(int(rate * (1 << 32)), (1 << 32) - 1))
+    return (_mix32(x) >= thresh).astype(jnp.float32)
+
+
+# ----------------------------------------------------------- ring structure
+
+def init_inbox_ring(params: PyTree, staleness: int, dp: int) -> Dict:
+    """Fresh-run bootstrap of the staleness-k inbox ring: k slot copies of
+    the params (copies, not aliases — the packed engine donates state
+    buffers in place), an all-invalid mask ("nothing received yet", so the
+    first k arrival mixes are skips), and dispatch counter 0."""
+    if staleness < 1:
+        raise ValueError(f"inbox ring needs staleness >= 1, got {staleness}")
+    return {
+        "slots": tuple(jax.tree.map(jnp.copy, params)
+                       for _ in range(int(staleness))),
+        "valid": jnp.zeros((max(dp, 1), int(staleness)), jnp.float32),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def inbox_ring_specs(param_specs: PyTree, dp_axes: Sequence[str],
+                     staleness: int) -> Dict:
+    """PartitionSpec tree matching ``init_inbox_ring``'s structure: every
+    slot mirrors the param specs, the (dp, k) validity mask is sharded on
+    the replica axis only, the dispatch counter is replicated."""
+    dp_axes = tuple(dp_axes)
+    front = (dp_axes if len(dp_axes) > 1 else dp_axes[0]) if dp_axes else None
+    return {
+        "slots": tuple(param_specs for _ in range(int(staleness))),
+        "valid": P(front, None),
+        "t": P(),
+    }
+
+
+def _linear_rank(mesh: Mesh, axis_names: Tuple[str, ...]) -> jnp.ndarray:
+    """This device's position in the linearized replica space — the same
+    row-major linearization ``ppermute`` pairs use over ``axis_names``."""
+    idx = jnp.zeros((), jnp.int32)
+    for a in axis_names:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    return idx
+
+
+def _ring_advance(slots, valid, t, payload, ok) -> Dict:
+    """FIFO advance of the local ring shard: drop the consumed slot, append
+    the fresh dispatch with its landed/dropped flag."""
+    ok_col = jnp.broadcast_to(
+        jnp.asarray(ok, jnp.float32).reshape(1, 1), (valid.shape[0], 1))
+    return {"slots": tuple(slots[1:]) + (payload,),
+            "valid": jnp.concatenate([valid[:, 1:], ok_col], axis=1),
+            "t": t + 1}
+
+
+# --------------------------------------------------------- unfused engines
 
 def make_async_gossip_mix(
     mesh: Mesh,
@@ -70,18 +173,24 @@ def make_async_gossip_mix(
     param_specs: PyTree,
     *,
     alpha: float = 0.5,
+    staleness: int = 1,
+    drop_rate: float = 0.0,
+    drop_seed: int = 0,
     mode: str = "static",
     mix_impl: Callable | None = None,
-) -> Callable[[PyTree, PyTree, Any], Tuple[PyTree, PyTree]]:
-    """Build ``mix(params, inbox, phase) -> (mixed, new_inbox)``.
+) -> Callable[[PyTree, Dict, Any], Tuple[PyTree, Dict]]:
+    """Build ``mix(params, ring, phase) -> (mixed, new_ring)``.
 
-    ``params`` and ``inbox`` share the same structure and sharding (leading
-    replica axis over ``axis_names``). At phase t the arrival mix consumes
-    the inbox and the outgoing ppermute is issued with schedule row t; its
-    result is only returned as state, so the transfer overlaps whatever
-    compute the caller schedules after the mix (the whole fwd/bwd in the
-    train step). ``mix_impl(local, received, alpha)`` swaps in the Pallas
-    bucket kernel on the packed path.
+    ``params`` leaves carry a leading replica axis over ``axis_names``;
+    ``ring`` is an ``init_inbox_ring`` structure whose slots share the
+    params' structure and sharding. At phase t the arrival mix consumes the
+    oldest slot scaled by its validity (a skipped exchange mixes with
+    alpha = 0), and the outgoing ppermute of the mixed params is issued with
+    schedule row t; its result is only returned as ring state, so the
+    transfer has ``staleness`` full steps of caller-scheduled compute to
+    land. ``mix_impl(local, received, alpha)`` swaps in the Pallas bucket
+    kernel on the packed path — it receives the masked alpha as a traced
+    scalar (the kernels' masked-alpha operand path).
     """
     axis_names = tuple(axis_names)
     dp = int(np.prod([mesh.shape[a] for a in axis_names]))
@@ -89,21 +198,31 @@ def make_async_gossip_mix(
         raise ValueError(
             f"schedule built for p={schedule.p} but mesh axes {axis_names} "
             f"give dp={dp}")
+    if staleness < 1:
+        raise ValueError(f"gossip_async needs staleness >= 1, got {staleness}")
+    k = int(staleness)
     all_pairs = [linear_pairs(schedule, t) for t in range(schedule.period)]
+    ring_specs = inbox_ring_specs(param_specs, axis_names, k)
 
-    def mix_leaf(x: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
-        if mix_impl is not None:
-            return mix_impl(x, b, alpha)
-        return x * (1.0 - alpha) + b * alpha
+    def local_async(pairs, params, ring):
+        slots, valid, t = ring["slots"], ring["valid"], ring["t"]
+        a = alpha * valid[:, 0]                    # masked alpha, (local_dp,)
 
-    def local_async(pairs, params, inbox):
-        mixed = jax.tree.map(mix_leaf, params, inbox)
-        new_inbox = jax.tree.map(
+        def mix_leaf(x, b):
+            if mix_impl is not None:
+                return mix_impl(x, b, a.reshape(-1)[0])
+            w = a.reshape(a.shape + (1,) * (x.ndim - 1))
+            return x * (1.0 - w) + b * w
+
+        mixed = jax.tree.map(mix_leaf, params, slots[0])
+        payload = jax.tree.map(
             lambda m: jax.lax.ppermute(m, axis_names, pairs), mixed)
-        return mixed, new_inbox
+        ok = exchange_ok(t, _linear_rank(mesh, axis_names),
+                         drop_seed, drop_rate)
+        return mixed, _ring_advance(slots, valid, t, payload, ok)
 
-    in_specs = (param_specs, param_specs)
-    out_specs = (param_specs, param_specs)
+    in_specs = (param_specs, ring_specs)
+    out_specs = (param_specs, ring_specs)
 
     if mode == "static":
         mixers = [
@@ -113,24 +232,24 @@ def make_async_gossip_mix(
             for pairs in all_pairs
         ]
 
-        def mix(params: PyTree, inbox: PyTree, phase: int):
-            return mixers[int(phase) % schedule.period](params, inbox)
+        def mix(params: PyTree, ring: Dict, phase: int):
+            return mixers[int(phase) % schedule.period](params, ring)
 
         return mix
 
     if mode == "dynamic":
-        def body(params: PyTree, inbox: PyTree, phase: jnp.ndarray):
+        def body(params: PyTree, ring: Dict, phase: jnp.ndarray):
             branches = [functools.partial(local_async, pairs)
                         for pairs in all_pairs]
             return jax.lax.switch(phase % schedule.period, branches,
-                                  params, inbox)
+                                  params, ring)
 
         inner = jax.shard_map(
             body, mesh=mesh, in_specs=in_specs + (P(),), out_specs=out_specs,
             check_vma=False)
 
-        def mix(params: PyTree, inbox: PyTree, phase):
-            return inner(params, inbox, jnp.asarray(phase, jnp.int32))
+        def mix(params: PyTree, ring: Dict, phase):
+            return inner(params, ring, jnp.asarray(phase, jnp.int32))
 
         return mix
 
@@ -144,21 +263,28 @@ def make_packed_async_gossip_mix(
     layout: BucketLayout,
     *,
     alpha: float = 0.5,
+    staleness: int = 1,
+    drop_rate: float = 0.0,
+    drop_seed: int = 0,
     mode: str = "static",
     mix_impl: Callable | None = None,
-) -> Callable[[PyTree, PyTree, Any], Tuple[PyTree, PyTree]]:
-    """Async mix over persistent gossip buckets (core.buckets.PackedParams).
+) -> Callable[[PyTree, Dict, Any], Tuple[PyTree, Dict]]:
+    """Bounded-delay async mix over persistent gossip buckets.
 
-    Both the live params and the inbox are PackedParams over the same
-    layout: the inbox is literally last step's wire buffers, kept resident.
-    Each step issues one ppermute + one (donatable, in-place) mix per bucket;
-    the same sharding restriction as the sync packed engine applies (replica
-    axis only — pure_dp / smoke meshes).
+    Both the live params and every ring slot are PackedParams over the same
+    layout: the slots are literally the last k steps' wire buffers, kept
+    resident. Each step issues one ppermute + one (donatable, in-place,
+    masked-alpha) mix per bucket; the same sharding restriction as the sync
+    packed engine applies (replica axis only — pure_dp / smoke meshes).
     """
     specs = packed_param_specs(layout, tuple(axis_names))
     return make_async_gossip_mix(mesh, axis_names, schedule, specs,
-                                 alpha=alpha, mode=mode, mix_impl=mix_impl)
+                                 alpha=alpha, staleness=staleness,
+                                 drop_rate=drop_rate, drop_seed=drop_seed,
+                                 mode=mode, mix_impl=mix_impl)
 
+
+# ------------------------------------------------------------ fused engine
 
 def make_packed_fused_async_update(
     mesh: Mesh,
@@ -168,35 +294,34 @@ def make_packed_fused_async_update(
     optimizer,
     *,
     alpha: float = 0.5,
+    staleness: int = 1,
+    drop_rate: float = 0.0,
+    drop_seed: int = 0,
     mode: str = "static",
     impl: str | None = None,
 ) -> Callable:
-    """Fused mix+apply engine for the staleness-1 inbox protocol: build
-    ``update(params, grads, inbox, opt_state, phase) -> (params',
-    opt_state', new_inbox)``.
+    """Fused mix+apply engine for the staleness-k inbox ring: build
+    ``update(params, grads, ring, opt_state, phase) -> (params',
+    opt_state', new_ring)``.
 
-    The inbox is just the mix operand: the single-sweep fused kernel
-    (kernels/fused_update.py) computes the arrival mix
-    ``(1-alpha)*p + alpha*inbox`` and the optimizer update at the mixed
-    point in ONE pass per bucket — the standalone arrival-mix sweep the
-    unfused inbox protocol pays is gone.  The outgoing exchange
-    ``ppermute(params)`` (schedule row ``phase``) is dispatched at the TOP
-    of the program — it depends only on the incoming params, so XLA hoists
-    the whole forward/backward between collective-permute start/done — and
-    its result is returned solely as the next step's inbox: the same
-    dispatch-early / consume-next-step CARRY DISCIPLINE as PR 2's unfused
-    inbox protocol, with the same staleness bound (the partner contribution
-    misses exactly one update).  The per-step ALGEBRA differs from the
-    unfused protocol, though: the wire carries the raw incoming params
-    (PR 2 transmitted the post-arrival-mix params), and because mix+update
-    are one kernel at the END of the step, the caller's gradients are
-    evaluated at the incoming (pre-mix) params rather than the mixed point
-    — the fused train step is the GoSGD-style combined update, not a
-    bit-for-bit rewrite of the PR-2 step (``fused_update=False`` keeps
-    that).  The mixing matrix per step is unchanged ((1-a)I + aP, doubly
-    stochastic), so mean preservation and the diffusion argument carry
-    over.  Fresh runs bootstrap with ``inbox = copy(params)``, making step
-    0's arrival mix the identity.
+    The consumed ring slot is the mix operand of the single-sweep fused
+    kernel (kernels/fused_update.py) and the slot's validity scales alpha
+    through the kernel's masked-alpha coefficient — a skipped exchange
+    degenerates to the pure local update inside the same sweep, no second
+    pass.  The outgoing exchange ``ppermute(params)`` (schedule row
+    ``phase``) is dispatched at the TOP of the program — it depends only on
+    the incoming params, so XLA hoists the whole forward/backward between
+    collective-permute start/done — and its result is returned solely as
+    the newest ring slot, giving the wire ``staleness`` full steps to land.
+    As in PR 3, the per-step ALGEBRA differs from the unfused inbox
+    protocol: the wire carries the raw incoming params (the unfused path
+    transmits the post-arrival-mix params) and gradients are evaluated at
+    the pre-mix params — the GoSGD-style combined update.  The mixing
+    matrix per step is unchanged ((1-a_eff)I + a_eff P, row-stochastic;
+    doubly stochastic when nothing is dropped), so mean preservation and
+    the diffusion argument carry over.  Fresh runs bootstrap with an
+    all-invalid ring (``init_inbox_ring``), making the first k arrival
+    mixes identity.
     """
     axis_names = tuple(axis_names)
     dp = int(np.prod([mesh.shape[a] for a in axis_names]))
@@ -204,51 +329,64 @@ def make_packed_fused_async_update(
         raise ValueError(
             f"schedule built for p={schedule.p} but mesh axes {axis_names} "
             f"give dp={dp}")
+    if staleness < 1:
+        raise ValueError(f"gossip_async needs staleness >= 1, got {staleness}")
+    k = int(staleness)
     specs = packed_param_specs(layout, axis_names)
+    ring_specs = inbox_ring_specs(specs, axis_names, k)
     local = packed_fused_local_update(layout, optimizer, alpha=alpha,
                                       impl=impl)
     all_pairs = [linear_pairs(schedule, t) for t in range(schedule.period)]
 
-    def local_async(pairs, params, grads, inbox, opt_state):
+    def local_async(pairs, params, grads, ring, opt_state):
         # dispatch first: the outbox depends only on the incoming params
-        # and is consumed only as returned state — the wire overlaps
-        # everything scheduled before this call (the whole fwd/bwd)
+        # and is consumed only as returned ring state — the wire overlaps
+        # everything scheduled before this call (the whole fwd/bwd) plus
+        # the next staleness-1 steps entirely
+        slots, valid, t = ring["slots"], ring["valid"], ring["t"]
         outbox = PackedParams(
             [jax.lax.ppermute(b, axis_names, pairs) for b in params.buckets],
             layout)
-        new_params, new_state = local(params, grads, opt_state, inbox)
-        return new_params, new_state, outbox
+        # each device owns exactly one replica row under the packed-engine
+        # sharding restriction, so the masked alpha is one traced scalar
+        a_eff = alpha * valid[0, 0]
+        new_params, new_state = local(params, grads, opt_state, slots[0],
+                                      alpha_eff=a_eff)
+        ok = exchange_ok(t, _linear_rank(mesh, axis_names),
+                         drop_seed, drop_rate)
+        return new_params, new_state, _ring_advance(slots, valid, t,
+                                                    outbox, ok)
 
     def opt_specs_of(opt_state):
         return fused_opt_state_specs(opt_state, specs)
 
     if mode == "static":
-        def update(params, grads, inbox, opt_state, phase):
+        def update(params, grads, ring, opt_state, phase):
             pairs = all_pairs[int(phase) % schedule.period]
             opt_specs = opt_specs_of(opt_state)
             fn = jax.shard_map(
                 functools.partial(local_async, pairs), mesh=mesh,
-                in_specs=(specs, specs, specs, opt_specs),
-                out_specs=(specs, opt_specs, specs), check_vma=False)
-            return fn(params, grads, inbox, opt_state)
+                in_specs=(specs, specs, ring_specs, opt_specs),
+                out_specs=(specs, opt_specs, ring_specs), check_vma=False)
+            return fn(params, grads, ring, opt_state)
 
         return update
 
     if mode == "dynamic":
-        def update(params, grads, inbox, opt_state, phase):
+        def update(params, grads, ring, opt_state, phase):
             opt_specs = opt_specs_of(opt_state)
 
-            def body(params, grads, inbox, opt_state, ph):
+            def body(params, grads, ring, opt_state, ph):
                 branches = [functools.partial(local_async, pairs)
                             for pairs in all_pairs]
                 return jax.lax.switch(ph % schedule.period, branches,
-                                      params, grads, inbox, opt_state)
+                                      params, grads, ring, opt_state)
 
             inner = jax.shard_map(
                 body, mesh=mesh,
-                in_specs=(specs, specs, specs, opt_specs, P()),
-                out_specs=(specs, opt_specs, specs), check_vma=False)
-            return inner(params, grads, inbox, opt_state,
+                in_specs=(specs, specs, ring_specs, opt_specs, P()),
+                out_specs=(specs, opt_specs, ring_specs), check_vma=False)
+            return inner(params, grads, ring, opt_state,
                          jnp.asarray(phase, jnp.int32))
 
         return update

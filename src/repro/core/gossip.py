@@ -188,11 +188,16 @@ def make_packed_gossip_mix(
 def packed_fused_local_update(layout: BucketLayout, optimizer, *,
                               alpha: float, impl: str | None = None):
     """Per-device body of the fused engine: ``body(params, grads, opt_state,
-    partner) -> (params', opt_state')`` over local PackedParams shards.
+    partner, alpha_eff=None) -> (params', opt_state')`` over local
+    PackedParams shards.
 
     ``partner`` is the mix operand (the landed ppermute result — sync recv
-    or async inbox), or None for the pure local update (alpha treated as 0).
-    One ``optimizer.fused_update`` call — a single read+write sweep — per
+    or async ring slot), or None for the pure local update (alpha treated as
+    0).  ``alpha_eff`` overrides the closure alpha per call — the
+    bounded-delay engine passes the masked alpha (the static alpha scaled by
+    the consumed slot's validity) as a traced scalar, which the kernels
+    consume through their masked-alpha coefficient path.  One
+    ``optimizer.fused_update`` call — a single read+write sweep — per
     bucket; the step counter advances exactly like the tree-level update.
     Shared by the sync engine below and the async engine in async_gossip.py.
     """
@@ -202,7 +207,9 @@ def packed_fused_local_update(layout: BucketLayout, optimizer, *,
             "the unfused mix-then-apply path")
     moment_keys = tuple(optimizer.fused_moments)
 
-    def body(params, grads, opt_state, partner):
+    def body(params, grads, opt_state, partner, alpha_eff=None):
+        if alpha_eff is None:
+            alpha_eff = alpha if partner is not None else 0.0
         step = opt_state["step"]
         new_buckets = []
         new_moms = [[] for _ in moment_keys]
@@ -213,8 +220,7 @@ def packed_fused_local_update(layout: BucketLayout, optimizer, *,
             mix_operand = partner.buckets[i] if partner is not None else None
             p2, m2 = optimizer.fused_update(
                 i, params.buckets[i], grads.buckets[i], mix_operand, moms,
-                step=step, alpha=alpha if partner is not None else 0.0,
-                layout=layout, impl=impl)
+                step=step, alpha=alpha_eff, layout=layout, impl=impl)
             new_buckets.append(p2)
             for j, mv in enumerate(m2):
                 new_moms[j].append(mv)

@@ -8,11 +8,12 @@ and every protocol degenerates to local SGD over that axis).
 
     gossip        local update, then pairwise-average params with the step's
                   dissemination partner (THE paper's algorithm, §4).
-    gossip_async  staleness-1 inbox protocol (§5): the arrival mix consumes
-                  partner params received during the *previous* step and the
+    gossip_async  bounded-delay inbox-ring protocol (§4.2/§5): the arrival
+                  mix consumes the oldest slot of a staleness-k ring of
+                  in-flight exchanges (scaled by the slot's validity — a
+                  dropped/late exchange is skipped, alpha = 0) and the
                   outgoing ppermute is dispatched immediately, so the wire
-                  transfer overlaps the next forward/backward
-                  (core.async_gossip).
+                  has k full steps of compute to land (core.async_gossip).
     agd           gradients mean-reduced across replicas every step — the
                   paper's all-reduce baseline with layer-wise async overlap
                   (S-Caffe / PowerAI / Caffe2 style, §3.1/§7.1).
@@ -25,10 +26,10 @@ All protocols expose the same two hooks so the train step is protocol-neutral:
     grads  = proto.comm_grads(grads, phase)     # before optimizer.update
     params = proto.comm_params(params, phase)   # after optimizer.update
 
-``gossip_async`` carries per-step state: when ``proto.carries_inbox``, the
-train step calls ``comm_params(params, phase, inbox=inbox)`` *before* the
-forward pass (the arrival mix + re-dispatch) and gets ``(mixed, new_inbox)``
-back; the new inbox rides in the train state and is checkpointed with it.
+``gossip_async`` carries per-step state: when ``proto.staleness > 0``, the
+train step calls ``comm_params(params, phase, inbox=ring)`` *before* the
+forward pass (the arrival mix + re-dispatch) and gets ``(mixed, new_ring)``
+back; the ring rides in the train state and is checkpointed with it.
 """
 from __future__ import annotations
 
@@ -66,6 +67,12 @@ class Protocol:
     schedule: Optional[GossipSchedule]
     _mix: Optional[Callable]  # gossip / gossip_async only
     dynamic: bool = False
+    # Maximum steps between a param snapshot leaving a rank and being mixed
+    # in by its partner: 0 for synchronous protocols, the inbox-ring depth k
+    # for gossip_async (any k >= 1 — staleness is a runtime parameter, NOT
+    # implied by whether an inbox exists). Sizes the ring in the train state
+    # and the trainer's in-flight dispatch window (2 + 2 * staleness).
+    staleness: int = 0
 
     @property
     def period(self) -> int:
@@ -73,16 +80,12 @@ class Protocol:
 
     @property
     def carries_inbox(self) -> bool:
-        """True when the train state must carry the staleness-1 inbox (and
-        ``comm_params`` takes/returns it)."""
-        return self.name == "gossip_async" and self.dp > 1
-
-    @property
-    def staleness(self) -> int:
-        """Steps between a param snapshot leaving a rank and being mixed in
-        by its partner: 0 for synchronous protocols, 1 for gossip_async.
-        Sizes the trainer's in-flight dispatch window."""
-        return 1 if self.carries_inbox else 0
+        """True when the train state must carry the inbox ring (and
+        ``comm_params`` takes/returns it) — i.e. ``staleness > 0``. Kept for
+        readability; ``staleness`` is the primary contract (the ring depth),
+        and call sites that need the depth must read it directly rather than
+        assume this flag implies any particular k."""
+        return self.staleness > 0
 
     def comm_grads(self, grads: PyTree, phase) -> PyTree:
         if self.name == "agd" and self.dp > 1:
@@ -92,12 +95,13 @@ class Protocol:
     def comm_params(self, params: PyTree, phase, inbox: PyTree = None):
         """Synchronous protocols: ``comm_params(params, phase) -> params``
         after the optimizer update. ``gossip_async`` (dp > 1):
-        ``comm_params(params, phase, inbox) -> (mixed, new_inbox)`` *before*
-        the forward pass — the arrival mix plus the pipelined re-dispatch."""
-        if self.carries_inbox:
+        ``comm_params(params, phase, inbox=ring) -> (mixed, new_ring)``
+        *before* the forward pass — the masked arrival mix of the oldest
+        ring slot plus the pipelined re-dispatch."""
+        if self.staleness > 0:
             if inbox is None:
                 raise ValueError(
-                    "gossip_async needs the inbox: comm_params(params, "
+                    "gossip_async needs the inbox ring: comm_params(params, "
                     "phase, inbox) — the train state must carry it")
             return self._mix(params, inbox, phase)
         if self.dp <= 1:
@@ -113,13 +117,6 @@ class Protocol:
             return _replica_mean(params) if (int(phase) + 1) % sub == 0 else params
         return params
 
-    def init_inbox(self, params: PyTree) -> PyTree:
-        """Fresh-run staleness-1 bootstrap: an inbox equal to the local
-        params ("nothing received yet"), so step 0's arrival mix is the
-        identity and step 0's dispatch is the first real exchange. A copy,
-        not an alias — the packed engine donates state buffers in place."""
-        return jax.tree.map(jnp.copy, params)
-
 
 def make_protocol(
     name: str,
@@ -130,6 +127,9 @@ def make_protocol(
     topology: str = "dissemination",
     num_rotations: int = 2,
     alpha: float = 0.5,
+    staleness: int = 1,
+    drop_rate: float = 0.0,
+    drop_seed: int = 0,
     mode: str = "static",
     mix_impl: Callable | None = None,
     packed_layout: BucketLayout | None = None,
@@ -142,9 +142,18 @@ def make_protocol(
     With ``packed_layout``, params are core.buckets.PackedParams and the
     gossip mix runs the bucketed engine (one ppermute + in-place mix per
     persistent bucket) instead of the per-leaf path.
+
+    ``staleness`` (gossip_async only) is the inbox-ring depth k: the
+    exchange dispatched at step t is consumed at step t + k.  ``drop_rate``
+    injects emulated-wire timeout drops (skip-on-timeout) through the
+    deterministic ``core.async_gossip.exchange_ok`` hash seeded by
+    ``drop_seed``; both are ignored by the synchronous protocols.
     """
     if name not in PROTOCOLS:
         raise ValueError(f"unknown protocol {name!r}; options {PROTOCOLS}")
+    if name == "gossip_async" and staleness < 1:
+        raise ValueError(f"gossip_async staleness must be >= 1, "
+                         f"got {staleness}")
     data_axes = tuple(data_axes)
     dp = int(np.prod([mesh.shape[a] for a in data_axes])) if data_axes else 1
     schedule = None
@@ -164,10 +173,14 @@ def make_protocol(
         if packed_layout is not None:
             mix = make_packed_async_gossip_mix(
                 mesh, data_axes, schedule, packed_layout, alpha=alpha,
-                mode=mode, mix_impl=mix_impl)
+                staleness=staleness, drop_rate=drop_rate,
+                drop_seed=drop_seed, mode=mode, mix_impl=mix_impl)
         else:
-            mix = make_async_gossip_mix(mesh, data_axes, schedule,
-                                        param_specs, alpha=alpha, mode=mode,
-                                        mix_impl=mix_impl)
+            mix = make_async_gossip_mix(
+                mesh, data_axes, schedule, param_specs, alpha=alpha,
+                staleness=staleness, drop_rate=drop_rate,
+                drop_seed=drop_seed, mode=mode, mix_impl=mix_impl)
     return Protocol(name=name, dp=dp, schedule=schedule, _mix=mix,
-                    dynamic=(mode == "dynamic"))
+                    dynamic=(mode == "dynamic"),
+                    staleness=(int(staleness)
+                               if (name == "gossip_async" and dp > 1) else 0))

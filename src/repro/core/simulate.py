@@ -33,6 +33,7 @@ __all__ = [
     "replicate",
     "gossip_mix_sim",
     "gossip_mix_sim_delayed",
+    "gossip_mix_sim_delayed_k",
     "allreduce_mean_sim",
     "replica_variance",
     "make_sim_train_step",
@@ -72,6 +73,54 @@ def gossip_mix_sim_delayed(params: PyTree, inbox: PyTree,
                          params, inbox)
     new_inbox = jax.tree.map(lambda m: m[recv_from], mixed)
     return mixed, new_inbox
+
+
+def gossip_mix_sim_delayed_k(params: PyTree, ring: Any,
+                             recv_from: jnp.ndarray, alpha: float = 0.5,
+                             ok: jnp.ndarray = None
+                             ) -> Tuple[PyTree, Any]:
+    """Bounded-delay oracle for the staleness-k inbox ring (§4.2/§5) — the
+    reference semantics of core.async_gossip's shard_map engines.
+
+    ``ring`` is an ``init_inbox_ring`` structure: ``slots`` (k param-shaped
+    trees, oldest first), ``valid`` ((p, k) landed/valid mask) and ``t``
+    (dispatch counter). One async step at schedule row ``recv_from``:
+
+        a_eff_j     = alpha * valid[j, 0]          (masked alpha — the
+                                                    gossip_mix_sim_masked
+                                                    weighting, generalized)
+        mixed_j     = (1 - a_eff_j) * params_j + a_eff_j * slots[0]_j
+        payload_j   = mixed_{recv_from[j]}         (lands k steps later)
+        ring'       = slots[1:] + [payload],  valid' = [valid[:, 1:], ok]
+
+    A skipped/dropped exchange (valid 0) mixes with alpha = 0 — the mixing
+    matrix row degenerates to the identity row but still sums to 1
+    (row-stochastic), so a consensus state is a fixed point under any drop
+    pattern and, with no drops, the replica mean is preserved exactly (the
+    doubly stochastic (1-a)I + aP case).  ``ok`` is this dispatch's
+    landed-flag per receiving rank (``core.async_gossip.exchange_ok``;
+    defaults to all-ones).  At staleness 1 with an all-valid mask this is
+    exactly ``gossip_mix_sim_delayed``.  The shard_map implementation must
+    match this function bit-exactly (tests/test_async_gossip.py).
+    """
+    slots, valid, t = ring["slots"], ring["valid"], ring["t"]
+    a = alpha * valid[:, 0]
+
+    def mix(x, b):
+        w = a.reshape(a.shape + (1,) * (x.ndim - 1))
+        return x * (1.0 - w) + b * w
+
+    mixed = jax.tree.map(mix, params, slots[0])
+    payload = jax.tree.map(lambda m: m[recv_from], mixed)
+    if ok is None:
+        ok = jnp.ones((valid.shape[0],), jnp.float32)
+    new_ring = {
+        "slots": tuple(slots[1:]) + (payload,),
+        "valid": jnp.concatenate(
+            [valid[:, 1:], ok.astype(jnp.float32)[:, None]], axis=1),
+        "t": t + 1,
+    }
+    return mixed, new_ring
 
 
 def allreduce_mean_sim(params: PyTree) -> PyTree:
@@ -187,37 +236,53 @@ def make_async_sim_train_step(
     optimizer,
     schedule: GossipSchedule,
     alpha: float = 0.5,
+    staleness: int = 1,
+    drop_rate: float = 0.0,
+    drop_seed: int = 0,
 ) -> Callable:
-    """Jitted p-replica simulated train step for the staleness-1 async
+    """Jitted p-replica simulated train step for the bounded-delay async
     protocol — the laptop-scale twin of the ``gossip_async`` train step.
 
     Mirrors the distributed program structure exactly (arrival mix first,
     then compute), so given the same batches it produces the same loss
     sequence as the sharded trainer:
 
-        step(opt_state, params, inbox, batch_rep, step_idx)
-            -> (opt_state, params, inbox, metrics)
+        step(opt_state, params, ring, batch_rep, step_idx)
+            -> (opt_state, params, ring, metrics)
 
-    Start with ``inbox = jax.tree.map(jnp.copy, params)`` (the staleness-1
-    bootstrap: nothing received yet, first arrival mix is the identity).
-    ``metrics['replica_variance']`` is measured at the mixed params — the
-    model drift the paper's diffusion argument keeps bounded.
+    Start with ``ring = core.async_gossip.init_inbox_ring(params,
+    staleness, p)`` (the bounded-delay bootstrap: nothing received yet, the
+    first ``staleness`` arrival mixes are skips).  ``drop_rate`` injects
+    the emulated-wire timeout drops through the same ``exchange_ok`` hash
+    the distributed engines use, so sim and shard_map trajectories stay
+    bit-identical.  ``metrics['replica_variance']`` is measured at the
+    mixed params — the model drift the paper's diffusion argument keeps
+    bounded.
     """
+    from .async_gossip import exchange_ok
+
+    p = schedule.p
+    ranks = jnp.arange(p)
     perm_table = jnp.asarray(
         np.stack([schedule.recv_from(t) for t in range(schedule.period)])
     )
     grad_fn = jax.vmap(jax.value_and_grad(loss_fn))
 
     @jax.jit
-    def step(opt_state, params, inbox, batch, step_idx):
+    def step(opt_state, params, ring, batch, step_idx):
+        assert len(ring["slots"]) == int(staleness), (
+            f"ring carries {len(ring['slots'])} slots but the step was "
+            f"built for staleness {staleness}")
         recv = perm_table[step_idx % schedule.period]
-        mixed, new_inbox = gossip_mix_sim_delayed(params, inbox, recv, alpha)
+        ok = exchange_ok(ring["t"], ranks, drop_seed, drop_rate)
+        mixed, new_ring = gossip_mix_sim_delayed_k(params, ring, recv,
+                                                   alpha, ok)
         losses, grads = grad_fn(mixed, batch)
         new_params, opt_state = optimizer.update(mixed, grads, opt_state)
         metrics = {
             "loss": losses.mean(),
             "replica_variance": replica_variance(mixed),
         }
-        return opt_state, new_params, new_inbox, metrics
+        return opt_state, new_params, new_ring, metrics
 
     return step

@@ -25,6 +25,14 @@ and its read — the same kernel family serves non-gossip steps (agd / none /
 every_logp intermediate steps, dp == 1 smoke meshes) so the train step keeps
 one compiled body shape per phase.
 
+``alpha`` may also be a **traced** fp32 scalar (the masked-alpha variant):
+it is appended to the coefficient block the kernel already reads (lr, bias
+corrections), so the bounded-delay gossip runtime can scale alpha by the
+consumed ring slot's validity — a dropped/late exchange dynamically zeroes
+the partner term inside the same single sweep (skip-on-timeout), with no
+second pass and no per-mask recompilation.  A traced alpha equal to a static
+one produces bit-identical output (same fp32 op order).
+
 Aliasing invariants: the param output aliases the param input and each
 moment output aliases its moment input (grad and partner are read-only).
 Callers must treat the donated inputs as consumed (the packed trainer
@@ -54,6 +62,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .gossip_mix import alpha_is_static as _alpha_static
+
 __all__ = [
     "LANE", "DEFAULT_ROWS",
     "fused_sgd_1d", "fused_adamw_1d", "fused_lars_1d",
@@ -69,12 +79,13 @@ DEFAULT_ROWS = 256  # rows/tile: 256*128*4B*6bufs ~= 786 KB of VMEM
 # bodies and the jnp reference twins, so the two paths are bit-identical and
 # both mirror optim/optimizers.py op for op.
 
-def _mix_f32(p32: jnp.ndarray, partner: Optional[jnp.ndarray], alpha: float,
+def _mix_f32(p32: jnp.ndarray, partner: Optional[jnp.ndarray], alpha,
              store_dtype) -> jnp.ndarray:
     """Arrival mix in fp32; round-trips through the bucket dtype so the
     fused path is bit-compatible with the standalone mix kernel's output
-    (which materializes ``mixed`` in the bucket dtype)."""
-    if partner is None or alpha == 0.0:
+    (which materializes ``mixed`` in the bucket dtype). ``alpha`` may be a
+    Python float or a traced fp32 scalar (masked-alpha)."""
+    if partner is None or (_alpha_static(alpha) and alpha == 0.0):
         return p32
     mixed = p32 * (1.0 - alpha) + partner.astype(jnp.float32) * alpha
     return mixed.astype(store_dtype).astype(jnp.float32)
@@ -115,6 +126,13 @@ def _lars_math(p32, g32, m32, scale, lr, *, momentum: float,
 # ------------------------------------------------------------ kernel bodies
 # Ref layout: coef (1, k) fp32 scalars | [scale (bm, 1)] | param (bm, LANE) |
 # grad | [partner] | moments...  ->  param' (bm, LANE) | moments'...
+# ``alpha=None`` in a body means the masked-alpha variant: alpha rides as
+# the LAST coefficient in the coef block (its width is static, so the index
+# resolves at trace time).
+
+def _body_alpha(coef_ref, alpha):
+    return coef_ref[0, coef_ref.shape[-1] - 1] if alpha is None else alpha
+
 
 def _sgd_kernel(coef_ref, p_ref, g_ref, *refs, alpha, momentum, weight_decay,
                 has_partner, has_mom):
@@ -125,8 +143,8 @@ def _sgd_kernel(coef_ref, p_ref, g_ref, *refs, alpha, momentum, weight_decay,
     mo_ref = refs.pop(0) if has_mom else None
     lr = coef_ref[0, 0]
     p = _mix_f32(p_ref[...].astype(jnp.float32),
-                 b_ref[...] if b_ref is not None else None, alpha,
-                 po_ref.dtype)
+                 b_ref[...] if b_ref is not None else None,
+                 _body_alpha(coef_ref, alpha), po_ref.dtype)
     g = g_ref[...].astype(jnp.float32)
     m = m_ref[...].astype(jnp.float32) if has_mom else None
     p, m = _sgd_math(p, g, m, lr, momentum=momentum,
@@ -143,8 +161,8 @@ def _adamw_kernel(coef_ref, p_ref, g_ref, *refs, alpha, b1, b2, eps,
     m_ref, v_ref, po_ref, mo_ref, vo_ref = refs
     lr, c1, c2 = coef_ref[0, 0], coef_ref[0, 1], coef_ref[0, 2]
     p = _mix_f32(p_ref[...].astype(jnp.float32),
-                 b_ref[...] if b_ref is not None else None, alpha,
-                 po_ref.dtype)
+                 b_ref[...] if b_ref is not None else None,
+                 _body_alpha(coef_ref, alpha), po_ref.dtype)
     g = g_ref[...].astype(jnp.float32)
     p, m, v = _adamw_math(p, g, m_ref[...], v_ref[...], lr, c1, c2,
                           b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)
@@ -160,8 +178,8 @@ def _lars_kernel(coef_ref, s_ref, p_ref, g_ref, *refs, alpha, momentum,
     m_ref, po_ref, mo_ref = refs
     lr = coef_ref[0, 0]
     p = _mix_f32(p_ref[...].astype(jnp.float32),
-                 b_ref[...] if b_ref is not None else None, alpha,
-                 po_ref.dtype)
+                 b_ref[...] if b_ref is not None else None,
+                 _body_alpha(coef_ref, alpha), po_ref.dtype)
     g = g_ref[...].astype(jnp.float32)
     p, m = _lars_math(p, g, m_ref[...], s_ref[...], lr, momentum=momentum,
                       weight_decay=weight_decay)
@@ -226,11 +244,14 @@ def fused_sgd_1d(p, g, partner, mom, *, lr, alpha=0.5, momentum=0.9,
     The LANE-aligned prefix runs through the tiled kernel (aliasing param and
     momentum outputs onto their inputs when ``donate``); a ragged tail
     (< LANE elements) is updated by a jnp epilogue built from the same math.
-    ``partner=None`` or ``alpha=0`` statically drops the mix operand.
+    ``partner=None`` or static ``alpha=0`` drops the mix operand; a traced
+    ``alpha`` rides the coefficient block (masked-alpha variant).
     """
-    has_partner = partner is not None and alpha != 0.0
+    dyn = not _alpha_static(alpha)
+    has_partner = partner is not None and (dyn or alpha != 0.0)
     has_mom = mom is not None
-    body = functools.partial(_sgd_kernel, alpha=float(alpha),
+    body = functools.partial(_sgd_kernel,
+                             alpha=None if dyn else float(alpha),
                              momentum=float(momentum),
                              weight_decay=float(weight_decay),
                              has_partner=has_partner, has_mom=has_mom)
@@ -239,8 +260,9 @@ def fused_sgd_1d(p, g, partner, mom, *, lr, alpha=0.5, momentum=0.9,
     mains, tails = _split_aligned(ins)
     outs = ([p.dtype, mom.dtype] if has_mom else [p.dtype])
     aliases = {0: 0, len(mains) - 1: 1} if has_mom else {0: 0}
+    coefs = [lr] + ([alpha] if dyn else [])
     if mains[0].shape[0]:
-        ko = _tiled_call(body, [lr], [], mains, outs, aliases,
+        ko = _tiled_call(body, coefs, [], mains, outs, aliases,
                          block_rows=block_rows, interpret=interpret,
                          donate=donate)
     else:
@@ -262,18 +284,22 @@ def fused_adamw_1d(p, g, partner, m, v, *, lr, c1, c2, alpha=0.5, b1=0.9,
                    b2=0.95, eps=1e-8, weight_decay=0.0,
                    block_rows=DEFAULT_ROWS, interpret=False, donate=False):
     """Fused mix+AdamW; ``c1``/``c2`` are the (1 - beta^t) bias corrections
-    of the NEW step count (scalars, like ``lr``)."""
-    has_partner = partner is not None and alpha != 0.0
-    body = functools.partial(_adamw_kernel, alpha=float(alpha), b1=float(b1),
-                             b2=float(b2), eps=float(eps),
+    of the NEW step count (scalars, like ``lr``). A traced ``alpha`` rides
+    the coefficient block (masked-alpha variant)."""
+    dyn = not _alpha_static(alpha)
+    has_partner = partner is not None and (dyn or alpha != 0.0)
+    body = functools.partial(_adamw_kernel,
+                             alpha=None if dyn else float(alpha),
+                             b1=float(b1), b2=float(b2), eps=float(eps),
                              weight_decay=float(weight_decay),
                              has_partner=has_partner)
     ins = [p, g] + ([partner] if has_partner else []) + [m, v]
     mains, tails = _split_aligned(ins)
     nin = len(mains)
     aliases = {0: 0, nin - 2: 1, nin - 1: 2}
+    coefs = [lr, c1, c2] + ([alpha] if dyn else [])
     if mains[0].shape[0]:
-        ko = _tiled_call(body, [lr, c1, c2], [], mains,
+        ko = _tiled_call(body, coefs, [], mains,
                          [p.dtype, jnp.float32, jnp.float32], aliases,
                          block_rows=block_rows, interpret=interpret,
                          donate=donate)
@@ -306,8 +332,10 @@ def fused_lars_1d(p, g, partner, mom, row_scale, *, lr, alpha=0.5,
     """
     assert p.size % LANE == 0, f"lars fused path needs LANE-aligned buffers, got {p.shape}"
     assert row_scale.size == p.size // LANE, (row_scale.shape, p.shape)
-    has_partner = partner is not None and alpha != 0.0
-    body = functools.partial(_lars_kernel, alpha=float(alpha),
+    dyn = not _alpha_static(alpha)
+    has_partner = partner is not None and (dyn or alpha != 0.0)
+    body = functools.partial(_lars_kernel,
+                             alpha=None if dyn else float(alpha),
                              momentum=float(momentum),
                              weight_decay=float(weight_decay),
                              has_partner=has_partner)
@@ -315,7 +343,8 @@ def fused_lars_1d(p, g, partner, mom, row_scale, *, lr, alpha=0.5,
     mains, _ = _split_aligned(ins)
     scale = row_scale.reshape(-1, 1).astype(jnp.float32)
     nin = len(mains)
-    ko = _tiled_call(body, [lr], [scale], mains, [p.dtype, jnp.float32],
+    coefs = [lr] + ([alpha] if dyn else [])
+    ko = _tiled_call(body, coefs, [scale], mains, [p.dtype, jnp.float32],
                      {0: 0, nin - 1: 1}, block_rows=block_rows,
                      interpret=interpret, donate=donate)
     return (ko[0].reshape(p.shape),
@@ -325,12 +354,18 @@ def fused_lars_1d(p, g, partner, mom, row_scale, *, lr, alpha=0.5,
 # ------------------------------------------------------- public: jnp twins
 # Same math helpers, evaluated as one jnp elementwise chain: XLA fuses it
 # into a single loop over the bucket (the CPU fast path) and it doubles as
-# the bit-exact oracle for the Pallas kernels.
+# the bit-exact oracle for the Pallas kernels.  Like the kernels, ``alpha``
+# may be a Python float or a traced fp32 scalar (masked-alpha).
+
+def _ref_partner(partner, alpha):
+    return partner if (partner is not None
+                       and not (_alpha_static(alpha) and alpha == 0.0)) \
+        else None
+
 
 def fused_sgd_ref(p, g, partner, mom, *, lr, alpha=0.5, momentum=0.9,
                   weight_decay=0.0):
-    pf = _mix_f32(p.astype(jnp.float32),
-                  partner if (partner is not None and alpha != 0.0) else None,
+    pf = _mix_f32(p.astype(jnp.float32), _ref_partner(partner, alpha),
                   alpha, p.dtype)
     mf = mom.astype(jnp.float32) if mom is not None else None
     np_, nm = _sgd_math(pf, g.astype(jnp.float32), mf, lr, momentum=momentum,
@@ -341,8 +376,7 @@ def fused_sgd_ref(p, g, partner, mom, *, lr, alpha=0.5, momentum=0.9,
 
 def fused_adamw_ref(p, g, partner, m, v, *, lr, c1, c2, alpha=0.5, b1=0.9,
                     b2=0.95, eps=1e-8, weight_decay=0.0):
-    pf = _mix_f32(p.astype(jnp.float32),
-                  partner if (partner is not None and alpha != 0.0) else None,
+    pf = _mix_f32(p.astype(jnp.float32), _ref_partner(partner, alpha),
                   alpha, p.dtype)
     np_, nm, nv = _adamw_math(pf, g.astype(jnp.float32), m.astype(jnp.float32),
                               v.astype(jnp.float32), lr, c1, c2, b1=b1, b2=b2,
@@ -353,8 +387,7 @@ def fused_adamw_ref(p, g, partner, m, v, *, lr, c1, c2, alpha=0.5, b1=0.9,
 def fused_lars_ref(p, g, partner, mom, row_scale, *, lr, alpha=0.5,
                    momentum=0.9, weight_decay=0.0):
     assert p.size % LANE == 0, p.shape
-    pf = _mix_f32(p.astype(jnp.float32),
-                  partner if (partner is not None and alpha != 0.0) else None,
+    pf = _mix_f32(p.astype(jnp.float32), _ref_partner(partner, alpha),
                   alpha, p.dtype)
     scale = jnp.repeat(row_scale.reshape(-1).astype(jnp.float32), LANE
                        ).reshape(pf.shape)

@@ -15,6 +15,13 @@ whose length is not a LANE multiple by mixing the ragged tail (< 128
 elements) in a jnp epilogue instead of padding-copying the whole buffer, and
 can alias its output onto the local input (``donate=True``) so the mix runs
 in place on the persistent gossip buckets.
+
+``alpha`` may be a Python float (baked into the kernel — the PR-1/2 static
+path) or a traced fp32 scalar (shipped as a pinned (1, 1) operand every tile
+reads). The traced form is the **masked-alpha** path of the bounded-delay
+runtime: the staleness-k ring scales alpha by the consumed slot's validity,
+so a dropped/late exchange mixes with alpha = 0 — the skip happens inside
+the same single sweep, no second pass and no recompiled kernel per mask.
 """
 from __future__ import annotations
 
@@ -30,6 +37,12 @@ LANE = 128          # TPU lane width
 DEFAULT_ROWS = 512  # rows per tile: 512*128*4B*3bufs ~= 786 KB of VMEM
 
 
+def alpha_is_static(alpha) -> bool:
+    """True when ``alpha`` is a Python scalar the kernels can bake in; traced
+    values take the masked-alpha operand path."""
+    return isinstance(alpha, (int, float))
+
+
 def _mix_kernel(a_ref, b_ref, o_ref, *, alpha: float):
     # accumulate in fp32 regardless of the buffer dtype (bf16-native wire
     # format, full-precision averaging)
@@ -38,32 +51,54 @@ def _mix_kernel(a_ref, b_ref, o_ref, *, alpha: float):
     o_ref[...] = (a * (1.0 - alpha) + b * alpha).astype(o_ref.dtype)
 
 
-def gossip_mix_2d(a: jnp.ndarray, b: jnp.ndarray, alpha: float = 0.5,
+def _mix_kernel_dyn(al_ref, a_ref, b_ref, o_ref):
+    # masked-alpha variant: alpha arrives as a traced scalar in SMEM — the
+    # arithmetic is identical to the static kernel (fp32, same op order), so
+    # a traced alpha equal to the static one produces bit-identical output
+    al = al_ref[0, 0]
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    o_ref[...] = (a * (1.0 - al) + b * al).astype(o_ref.dtype)
+
+
+def gossip_mix_2d(a: jnp.ndarray, b: jnp.ndarray, alpha=0.5,
                   block_rows: int = DEFAULT_ROWS,
                   interpret: bool = False,
                   donate: bool = False) -> jnp.ndarray:
     """a, b: (M, N) with N a multiple of LANE; returns the mixed array.
 
     ``donate=True`` aliases the output buffer onto ``a`` (in-place mix on the
-    persistent bucket — no extra HBM allocation when the caller donates)."""
+    persistent bucket — no extra HBM allocation when the caller donates).
+    ``alpha``: Python float (static) or traced fp32 scalar (masked-alpha)."""
     assert a.shape == b.shape and a.dtype == b.dtype, (a.shape, b.shape)
     M, N = a.shape
     assert N % LANE == 0, f"last dim {N} must be a multiple of {LANE}"
     bm = min(block_rows, M)
     grid = (pl.cdiv(M, bm),)
     spec = pl.BlockSpec((bm, N), lambda i: (i, 0))
+    if alpha_is_static(alpha):
+        return pl.pallas_call(
+            functools.partial(_mix_kernel, alpha=float(alpha)),
+            grid=grid,
+            in_specs=[spec, spec],
+            out_specs=spec,
+            out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+            input_output_aliases={0: 0} if donate else {},
+            interpret=interpret,
+        )(a, b)
+    al = jnp.asarray(alpha, jnp.float32).reshape(1, 1)
     return pl.pallas_call(
-        functools.partial(_mix_kernel, alpha=float(alpha)),
+        _mix_kernel_dyn,
         grid=grid,
-        in_specs=[spec, spec],
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)), spec, spec],
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
-        input_output_aliases={0: 0} if donate else {},
+        input_output_aliases={1: 0} if donate else {},
         interpret=interpret,
-    )(a, b)
+    )(al, a, b)
 
 
-def gossip_mix_1d(a: jnp.ndarray, b: jnp.ndarray, alpha: float = 0.5,
+def gossip_mix_1d(a: jnp.ndarray, b: jnp.ndarray, alpha=0.5,
                   block_rows: int = DEFAULT_ROWS,
                   interpret: bool = False,
                   donate: bool = False) -> jnp.ndarray:

@@ -43,6 +43,17 @@ def main() -> None:
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--num-rotations", type=int, default=2)
+    ap.add_argument("--staleness", type=int, default=1,
+                    help="gossip_async inbox-ring depth k (bounded delay): "
+                    "the exchange dispatched at step t is consumed at step "
+                    "t+k, so the wire has k full steps of compute to land")
+    ap.add_argument("--drop-timeout", type=float, default=0.0,
+                    metavar="RATE",
+                    help="emulated-wire fault injection: probability that "
+                    "an exchange misses its staleness-k deadline and is "
+                    "skipped (mixed with alpha=0); deterministic per "
+                    "(step, rank) so resumed runs replay the same drops")
+    ap.add_argument("--drop-seed", type=int, default=0)
     ap.add_argument("--packed", action="store_true",
                     help="bucketed persistent-buffer gossip engine: params "
                     "packed once into LANE-aligned buckets, one ppermute + "
@@ -61,7 +72,9 @@ def main() -> None:
     ap.add_argument("--resume", action="store_true",
                     help="restore from --checkpoint (if it exists) and "
                     "continue from its saved step; async runs resume their "
-                    "staleness-1 inbox and gossip phase deterministically")
+                    "inbox ring and gossip phase deterministically (a "
+                    "checkpoint written at another --staleness is "
+                    "mask-padded / truncated into this run's ring)")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
 
@@ -87,11 +100,13 @@ def main() -> None:
         cfg, dist, opt, state_shapes=state_shapes, state_axes=state_axes,
         batch_shapes=batch_shapes, protocol=args.protocol,
         topology=args.topology, num_rotations=args.num_rotations,
-        gossip_packed=args.packed, fused_update=args.fused_update,
+        gossip_packed=args.packed, staleness=args.staleness,
+        drop_rate=args.drop_timeout, drop_seed=args.drop_seed,
+        fused_update=args.fused_update,
         remat=not (args.smoke or len(jax.devices()) == 1))
     state, _ = init_train_state(jax.random.key(0), cfg, dist, opt,
                                 packed=args.packed, layout=bundle.layout,
-                                inbox=bundle.protocol.carries_inbox)
+                                inbox=bundle.protocol.staleness)
 
     start_step = 0
     if args.resume and args.checkpoint and checkpoint_exists(args.checkpoint):
@@ -118,6 +133,8 @@ def main() -> None:
         end_step = start_step + args.steps
         save_state(args.checkpoint, trainer.state,
                    metadata={"arch": cfg.name, "protocol": args.protocol,
+                             "staleness": bundle.protocol.staleness,
+                             "drop_timeout": args.drop_timeout,
                              "phase": end_step % max(bundle.protocol.period, 1)},
                    step=end_step)
         print(f"checkpoint -> {args.checkpoint}")

@@ -108,6 +108,10 @@ def _lars_row_scale(layout, bucket_idx: int, p, g, partner, *, alpha: float,
     """
     import numpy as np
 
+    # traced alpha (masked-alpha path of the bounded-delay runtime) always
+    # mixes; only a static 0 drops the partner term from the prepass
+    use_partner = partner is not None and not (
+        isinstance(alpha, (int, float)) and alpha == 0.0)
     lane = layout.lane
     n = int(p.shape[-1])
     slots = sorted((s for s in layout.slots if s.bucket == bucket_idx),
@@ -123,7 +127,7 @@ def _lars_row_scale(layout, bucket_idx: int, p, g, partner, *, alpha: float,
         for s in slots:
             pf = jax.lax.slice_in_dim(pr, s.offset, s.offset + s.size
                                       ).astype(jnp.float32)
-            if br is not None and alpha != 0.0:
+            if br is not None:
                 bf = jax.lax.slice_in_dim(br, s.offset, s.offset + s.size
                                           ).astype(jnp.float32)
                 pf = (pf * (1.0 - alpha) + bf * alpha
@@ -142,7 +146,7 @@ def _lars_row_scale(layout, bucket_idx: int, p, g, partner, *, alpha: float,
 
     lead = p.shape[:-1]
     pf2, gf2 = p.reshape((-1, n)), g.reshape((-1, n))
-    if partner is not None and alpha != 0.0:
+    if use_partner:
         bf2 = partner.reshape((-1, n))
         scale = jax.vmap(one_replica)(pf2, gf2, bf2)
     else:

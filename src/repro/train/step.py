@@ -15,11 +15,14 @@ Step layout (mirrors GossipGraD Fig. 8/9):
     4. protocol.comm_params     — gossip ppermute + average  (comm, overlapped)
     5. ring-rotate the *next* batch shards (§4.5.2 shuffle)  (comm, overlapped)
 
-``gossip_async`` (§5, core.async_gossip) reorders this: the train state
-carries a staleness-1 **inbox** (partner params received last step), the
-arrival mix + outgoing ppermute run *before* step (1), and the transfer's
-result is only needed as the next step's inbox — so XLA overlaps the wire
-with the whole forward/backward instead of exposing it after the update.
+``gossip_async`` (§4.2/§5, core.async_gossip) reorders this: the train
+state carries a staleness-k **inbox ring** (the last k in-flight exchanges,
+oldest first, each with a landed/valid flag), the masked arrival mix of the
+oldest slot + the outgoing ppermute run *before* step (1), and the
+transfer's result is only needed k steps later — so XLA overlaps the wire
+with k whole forward/backwards instead of exposing it after the update, and
+an exchange that misses its deadline is simply skipped (alpha = 0 for that
+slot — the paper's unreliable-exchange premise).
 
 ``phase`` (the gossip schedule position) is STATIC by default: the launcher
 keeps ``schedule.period`` compiled variants — see core/gossip.py for the
@@ -56,6 +59,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import make_protocol, make_ring_shuffle
+from repro.core.async_gossip import inbox_ring_specs, init_inbox_ring
 from repro.core.buckets import PackedParams, build_layout, packed_param_specs
 from repro.dist_ctx import use_distribution
 from repro.models import lm_init
@@ -99,7 +103,7 @@ def _replicate_tree(tree: PyTree, dp: int) -> PyTree:
 
 def init_train_state(key, cfg: ModelConfig, dist: Distribution,
                      optimizer: Optimizer, *, packed: bool = False,
-                     layout=None, inbox: bool = False):
+                     layout=None, inbox: int = 0):
     """(state, state_axes): state = {"params","opt"}, leaves carry a leading
     replica axis of size dist.dp (1 in single-pod fsdp mode).
 
@@ -110,9 +114,10 @@ def init_train_state(key, cfg: ModelConfig, dist: Distribution,
     state derives its specs from the layout via packed_param_specs, not from
     axes).
 
-    ``inbox=True`` (gossip_async with dp > 1, i.e. the bundle's
-    ``protocol.carries_inbox``) adds the staleness-1 inbox bootstrap: a copy
-    of the params, so step 0's arrival mix is the identity."""
+    ``inbox`` is the inbox-ring depth (pass the bundle's
+    ``protocol.staleness``; 0 = no ring): gossip_async with dp > 1 carries a
+    staleness-k ring bootstrapped all-invalid ("nothing received yet"), so
+    the first k arrival mixes are skips."""
     params, axes = lm_init(key, cfg)
     params = _replicate_tree(params, max(dist.dp, 1))
     if packed:
@@ -122,7 +127,7 @@ def init_train_state(key, cfg: ModelConfig, dist: Distribution,
     opt_state = optimizer.init(params)
     state = {"params": params, "opt": opt_state}
     if inbox:
-        state["inbox"] = jax.tree.map(jnp.copy, params)
+        state["inbox"] = init_inbox_ring(params, int(inbox), max(dist.dp, 1))
     return state, axes
 
 
@@ -156,6 +161,9 @@ def make_train_step_bundle(
     gossip_mode: str = "static",
     gossip_packed: bool = False,
     gossip_alpha: float = 0.5,
+    staleness: int = 1,
+    drop_rate: float = 0.0,
+    drop_seed: int = 0,
     fused_update: Optional[bool] = None,
     fused_impl: Optional[str] = None,
     mix_impl: Optional[Callable] = None,
@@ -177,6 +185,13 @@ def make_train_step_bundle(
     (sgd, adamw) are packed-transparent; norm-based optimizers must declare
     ``packed_aware`` and read their per-leaf norms through the
     ``PackedParams.unpack()`` view (lars does).
+
+    ``staleness`` (gossip_async only) is the inbox-ring depth k — the
+    bounded delay of the async runtime: the exchange dispatched at step t
+    is consumed at step t + k, so the wire has k full steps to land.
+    ``drop_rate`` injects emulated-wire timeout drops (skip-on-timeout)
+    through the deterministic ``core.async_gossip.exchange_ok`` hash seeded
+    by ``drop_seed``.
 
     ``fused_update`` (default None = auto: on when packed and the optimizer
     exposes a ``fused_update`` backend) collapses mix + optimizer update
@@ -231,6 +246,7 @@ def make_train_step_bundle(
     proto = make_protocol(
         protocol, mesh, dist.dp_axes, param_specs,
         topology=topology, num_rotations=num_rotations, alpha=gossip_alpha,
+        staleness=staleness, drop_rate=drop_rate, drop_seed=drop_seed,
         mode=gossip_mode, mix_impl=mix_impl,
         packed_layout=layout, seed=seed)
 
@@ -238,10 +254,12 @@ def make_train_step_bundle(
     if fused_update:
         from repro.core.async_gossip import make_packed_fused_async_update
         from repro.core.gossip import make_packed_fused_update
-        if proto.carries_inbox:
+        if proto.staleness > 0:
             fused_eng = make_packed_fused_async_update(
                 mesh, dist.dp_axes, proto.schedule, layout, optimizer,
-                alpha=gossip_alpha, mode=gossip_mode, impl=fused_impl)
+                alpha=gossip_alpha, staleness=proto.staleness,
+                drop_rate=drop_rate, drop_seed=drop_seed,
+                mode=gossip_mode, impl=fused_impl)
         elif protocol == "gossip" and proto.dp > 1:
             fused_eng = make_packed_fused_update(
                 mesh, dist.dp_axes, proto.schedule, layout, optimizer,
@@ -253,10 +271,12 @@ def make_train_step_bundle(
                 mesh, dist.dp_axes, None, layout, optimizer,
                 alpha=0.0, mode=gossip_mode, impl=fused_impl)
 
-    if proto.carries_inbox:
-        # the staleness-1 inbox rides in the train state with the params'
-        # shapes and sharding (and is checkpointed with them)
-        state_specs = dict(state_specs, inbox=param_specs)
+    if proto.staleness > 0:
+        # the staleness-k inbox ring rides in the train state: k slots with
+        # the params' shapes and sharding, the per-slot validity mask, and
+        # the dispatch counter (all checkpointed with the state)
+        state_specs = dict(state_specs, inbox=inbox_ring_specs(
+            param_specs, dist.dp_axes, proto.staleness))
 
     # per-layer remat happens inside the stack (blocks.stack_apply) — the
     # whole-loss checkpoint variant kept 130+GB of scan residuals alive.
@@ -289,7 +309,7 @@ def make_train_step_bundle(
             # so the wire overlaps this fwd/bwd).
             (_, metrics), grads = grad_fn(params, batch)
             grads = proto.comm_grads(grads, phase)
-            if proto.carries_inbox:
+            if proto.staleness > 0:
                 new_params, new_opt, new_inbox = fused_eng(
                     params, grads, state["inbox"], state["opt"], phase)
             else:
@@ -300,18 +320,19 @@ def make_train_step_bundle(
                     # (amortized-O(1/log p)) pass
                     new_params = proto.comm_params(new_params, phase)
         else:
-            if proto.carries_inbox:
-                # staleness-1 arrival: mix last step's update against the
-                # inbox, then re-dispatch immediately. The ppermute's result
-                # is consumed only as the NEXT step's inbox, so the wire
-                # transfer overlaps the entire forward/backward below.
+            if proto.staleness > 0:
+                # bounded-delay arrival: masked-mix the oldest ring slot
+                # into the params (a dropped slot skips), then re-dispatch
+                # immediately. The ppermute's result is consumed only k
+                # steps later, so the wire transfer overlaps the entire
+                # forward/backward below (and the next k-1 whole steps).
                 params, new_inbox = proto.comm_params(params, phase,
                                                       inbox=state["inbox"])
             (_, metrics), grads = grad_fn(params, batch)
             grads = proto.comm_grads(grads, phase)
             new_params, new_opt = optimizer.update(params, grads,
                                                    state["opt"])
-            if not proto.carries_inbox:
+            if proto.staleness == 0:
                 new_params = proto.comm_params(new_params, phase)
         new_params = jax.tree.map(
             lambda x, s: jax.lax.with_sharding_constraint(x, dist.sharding(s)),
@@ -319,7 +340,7 @@ def make_train_step_bundle(
         next_batch = shuffle(batch) if shuffle is not None else batch
         metrics = jax.tree.map(lambda m: m.mean(), metrics)
         new_state = {"params": new_params, "opt": new_opt}
-        if proto.carries_inbox:
+        if proto.staleness > 0:
             new_state["inbox"] = new_inbox
         return new_state, next_batch, metrics
 

@@ -7,11 +7,14 @@ mesh alike.
 
 Dispatch pipelining: jax dispatches steps asynchronously, so the host can run
 ahead of the device — essential for ``gossip_async``, whose step-t wire
-transfer settles while step t+1's compute executes. Unbounded run-ahead,
+transfer settles while the next ``staleness`` steps' compute executes (the
+bounded-delay ring consumes it k steps after dispatch). Unbounded run-ahead,
 however, queues arbitrarily many host batches and step outputs, so the
 trainer keeps a **bounded in-flight window**: at most ``2 + 2 * staleness``
-dispatched-but-unfinished steps (tunable via ``inflight_window``); beyond
-that it blocks on the oldest step's metrics before dispatching more.
+dispatched-but-unfinished steps (the deeper the ring, the more steps must be
+allowed in flight for the overlap to materialize; tunable via
+``inflight_window``); beyond that it blocks on the oldest step's metrics
+before dispatching more.
 
 Buffer donation: packed states (bundle.layout set) donate the state into the
 step, so the per-bucket gossip mix writes onto the previous step's buffers

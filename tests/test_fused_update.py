@@ -163,6 +163,93 @@ def test_fused_bucket_matches_unfused_composition(opt_name, opt, dtype, alpha):
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("alpha", [0.5, 0.0])
+def test_masked_alpha_matches_static(dtype, alpha):
+    """The masked-alpha variant (alpha as a traced coefficient — the
+    bounded-delay runtime's skip-on-timeout path) computes the same numbers
+    as the statically-baked alpha: bit-identical on the jnp twins (the CPU
+    production path the async engines run) and the standalone gossip-mix
+    kernel; the Pallas-INTERPRET fused kernels land within 1-2 fp32 ulps of
+    their twins, because XLA:CPU picks different FMA contractions for the
+    mix-update chain when the multiplier is a parameter instead of a
+    constant (the same compiled-vs-eager caveat noted in the module
+    docstring — on TPU the kernel is compiled by Mosaic, not this path).
+    The bit-exactness that matters — engines == oracle with BOTH on the
+    traced form — is pinned by the p=8 subprocess suites."""
+    from repro.kernels.fused_update import (fused_adamw_1d, fused_adamw_ref,
+                                            fused_lars_ref, fused_sgd_1d,
+                                            fused_sgd_ref)
+    from repro.kernels.gossip_mix import gossip_mix_1d
+    rng = np.random.default_rng(5)
+    n = 4 * LANE
+    mk = lambda: jnp.asarray(rng.normal(size=(n,)), jnp.float32).astype(dtype)
+    p, g, b, mom = mk(), mk(), mk(), mk()
+    lr = jnp.float32(0.1)
+    al_t = jnp.float32(alpha)
+
+    def bit_eq(xs, ys):
+        for x, y in zip(xs, ys):
+            if x is None:
+                assert y is None
+                continue
+            np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                          np.asarray(y, np.float32))
+
+    # jnp twins: traced alpha == static alpha bitwise
+    fn = functools.partial(fused_sgd_ref, weight_decay=1e-4)
+    bit_eq(jax.jit(functools.partial(fn, alpha=alpha))(p, g, b, mom, lr=lr),
+           jax.jit(lambda *a, **kw: fn(*a, alpha=al_t, **kw))(p, g, b, mom,
+                                                              lr=lr))
+    m = jnp.zeros((n,), jnp.float32)
+    v = jnp.zeros((n,), jnp.float32)
+    aargs = dict(lr=lr, c1=jnp.float32(0.1), c2=jnp.float32(0.05))
+    bit_eq(jax.jit(functools.partial(fused_adamw_ref, alpha=alpha))(
+               p, g, b, m, v, **aargs),
+           jax.jit(lambda *a, **kw: fused_adamw_ref(*a, alpha=al_t, **kw))(
+               p, g, b, m, v, **aargs))
+    scale = jnp.ones((n // LANE,), jnp.float32)
+    bit_eq(jax.jit(functools.partial(fused_lars_ref, alpha=alpha))(
+               p, g, b, mom, scale, lr=lr),
+           jax.jit(lambda *a, **kw: fused_lars_ref(*a, alpha=al_t, **kw))(
+               p, g, b, mom, scale, lr=lr))
+
+    # standalone mix kernel: traced == static bitwise
+    ms = jax.jit(functools.partial(gossip_mix_1d, alpha=alpha,
+                                   interpret=True))(p, b)
+    md = jax.jit(lambda a_, b_: gossip_mix_1d(a_, b_, alpha=al_t,
+                                              interpret=True))(p, b)
+    np.testing.assert_array_equal(np.asarray(ms, np.float32),
+                                  np.asarray(md, np.float32))
+    # a zero traced alpha reproduces the statically-dropped partner exactly
+    # (the dynamic path keeps the read but the arithmetic must agree)
+    z = jax.jit(lambda a_, b_: gossip_mix_1d(a_, b_, alpha=jnp.float32(0.0),
+                                             interpret=True))(p, b)
+    np.testing.assert_array_equal(np.asarray(z, np.float32),
+                                  np.asarray(p, np.float32))
+
+    # Pallas-interpret fused kernels: within 1-2 fp32 ulps of the twins
+    # (moments, which see alpha only through tiny weight-decay coupling,
+    # come out bit-equal; params absorb the contraction difference)
+    tol = dict(rtol=1e-6, atol=1e-7) if dtype == jnp.float32 else \
+        dict(rtol=BF16_TOL, atol=BF16_TOL)
+    ks = jax.jit(lambda *a, **kw: fused_sgd_1d(
+        *a, alpha=al_t, interpret=True, weight_decay=1e-4, **kw))(
+        p, g, b, mom, lr=lr)
+    rs = jax.jit(lambda *a, **kw: fused_sgd_ref(
+        *a, alpha=al_t, weight_decay=1e-4, **kw))(p, g, b, mom, lr=lr)
+    for x, y in zip(ks, rs):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), **tol)
+    ka = jax.jit(lambda *a, **kw: fused_adamw_1d(
+        *a, alpha=al_t, interpret=True, **kw))(p, g, b, m, v, **aargs)
+    ra = jax.jit(lambda *a, **kw: fused_adamw_ref(*a, alpha=al_t, **kw))(
+        p, g, b, m, v, **aargs)
+    for x, y in zip(ka, ra):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), **tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_fused_ragged_tail(dtype):
     """The sgd/adamw kernels handle non-LANE-multiple buffers: aligned
     prefix through the tiled kernel, < LANE tail through the jnp epilogue —
@@ -332,6 +419,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import repro
 import jax, jax.numpy as jnp, numpy as np
 from repro.core import (build_schedule, build_layout, PackedParams,
+                        exchange_ok, init_inbox_ring,
                         make_packed_fused_update,
                         make_packed_fused_async_update)
 from repro.optim import sgd, adamw
@@ -383,46 +471,75 @@ for opt_name, opt in OPTS:
                         check(a, b)
             print(f"ok sync {opt_name} alpha={alpha} mode={mode}")
 
-# --- async engine: inbox is the mix operand; outbox = ppermute(params)
+# --- async engine over the staleness-k ring: the consumed slot is the mix
+# operand (masked alpha = alpha * validity); outbox = ppermute(params)
+alpha = 0.5
 for opt_name, opt in OPTS:
-    for mode in ("static", "dynamic"):
-        alpha = 0.5
-        eng = make_packed_fused_async_update(mesh, ("data",), sched, layout,
-                                             opt, alpha=alpha, mode=mode)
+    for k, rate, mode in ((1, 0.0, "static"), (1, 0.0, "dynamic"),
+                          (2, 0.35, "static"), (4, 0.0, "static"),
+                          (4, 0.35, "dynamic")):
+        eng = make_packed_fused_async_update(
+            mesh, ("data",), sched, layout, opt, alpha=alpha, staleness=k,
+            drop_rate=rate, drop_seed=3, mode=mode)
         jeng = [jax.jit(functools.partial(
                     eng, phase=(t if mode == "static" else jnp.int32(t))))
-                for t in range(sched.period + 2)]
-        def ref_step(rp, grads, rinbox, rst, recv_from):
-            new_inbox = PackedParams([b[recv_from] for b in rp.buckets],
-                                     layout)
+                for t in range(sched.period + k + 1)]
+        def ref_step(rp, grads, ring, rst, recv_from, ok):
+            slots, valid, t = ring["slots"], ring["valid"], ring["t"]
+            a = alpha * valid[:, 0]
+            new_slot = PackedParams([b[recv_from] for b in rp.buckets],
+                                    layout)
             mixed = PackedParams(
-                [((1.0 - alpha) * b + alpha * ib).astype(b.dtype)
-                 for b, ib in zip(rp.buckets, rinbox.buckets)], layout)
+                [((1.0 - a[:, None]) * b + a[:, None] * ib).astype(b.dtype)
+                 for b, ib in zip(rp.buckets, slots[0].buckets)], layout)
             new_p, new_st = opt.update(mixed, grads, rst)
-            return new_p, new_st, new_inbox
+            new_ring = {"slots": tuple(slots[1:]) + (new_slot,),
+                        "valid": jnp.concatenate([valid[:, 1:],
+                                                  ok[:, None]], 1),
+                        "t": t + 1}
+            return new_p, new_st, new_ring
         jref = jax.jit(ref_step)
         params = PackedParams.pack(tree, layout)
-        inbox = jax.tree.map(jnp.copy, params)
+        ring = init_inbox_ring(params, k, p)
         grads = PackedParams.pack(grads_tree, layout)
         st = opt.init(params)
         rp = PackedParams.pack(tree, layout)
-        rinbox = jax.tree.map(jnp.copy, rp)
+        rring = init_inbox_ring(rp, k, p)
         rst = opt.init(rp)
-        for t in range(sched.period + 2):
-            params, st, inbox = jeng[t](params, grads, inbox, st)
-            rp, rst, rinbox = jref(rp, grads, rinbox, rst,
-                                   jnp.asarray(sched.recv_from(t)))
+        for t in range(sched.period + k + 1):
+            params, st, ring = jeng[t](params, grads, ring, st)
+            ok = exchange_ok(rring["t"], jnp.arange(p), 3, rate)
+            rp, rst, rring = jref(rp, grads, rring, rst,
+                                  jnp.asarray(sched.recv_from(t)), ok)
             for a, b in zip(params.buckets, rp.buckets):
                 check(a, b)
-            for a, b in zip(inbox.buckets, rinbox.buckets):
-                check(a, b)
-        print(f"ok async {opt_name} mode={mode}")
+            check(ring["valid"], rring["valid"])
+            for sa, sb in zip(ring["slots"], rring["slots"]):
+                for a, b in zip(sa.buckets, sb.buckets):
+                    check(a, b)
+        print(f"ok async {opt_name} k={k} rate={rate} mode={mode}")
 
-# the fused async engine issues no per-step pack/unpack
-jx = str(jax.make_jaxpr(lambda q, g, b, s: eng(q, g, b, s, jnp.int32(0)))(
-    params, grads, inbox, st))
-assert "concatenate" not in jx, "fused engine has a per-step concat"
-print("ok jaxpr no-concat")
+# the fused async engine issues no per-step bucket pack/unpack (the only
+# concatenate is the (dp, k) validity-mask roll)
+def collect(jaxpr, out):
+    for eqn in jaxpr.eqns:
+        sizes = [int(np.prod(v.aval.shape)) for v in eqn.outvars
+                 if hasattr(v.aval, "shape")]
+        out.append((eqn.primitive.name, max(sizes) if sizes else 0))
+        for v in eqn.params.values():
+            for x in (v if isinstance(v, (list, tuple)) else [v]):
+                if hasattr(x, "eqns"):
+                    collect(x, out)
+                elif hasattr(x, "jaxpr") and hasattr(x.jaxpr, "eqns"):
+                    collect(x.jaxpr, out)
+jx = jax.make_jaxpr(lambda q, g, b, s: eng(q, g, b, s, jnp.int32(0)))(
+    params, grads, ring, st)
+eqns = []
+collect(jx.jaxpr, eqns)
+cats = [(n, s) for n, s in eqns
+        if n == "concatenate" and s >= min(layout.bucket_sizes)]
+assert not cats, f"fused engine has a per-step bucket concat: {cats}"
+print("ok jaxpr no-bucket-concat")
 
 # --- lars sync engine: reference = the REAL tree-level lars applied per
 # replica (each rank owns a distinct model — the trust ratio must never
