@@ -1,0 +1,204 @@
+"""Bench-regression gate: diff smoke-run BENCH_*.json against committed
+baselines.
+
+    PYTHONPATH=src python -m benchmarks.run --only kernels --smoke   # etc.
+    PYTHONPATH=src python -m benchmarks.check_regression             # gate
+    PYTHONPATH=src python -m benchmarks.check_regression --update    # re-baseline
+
+The smoke benchmarks (benchmarks.run --only {kernels,async,update,straggler}
+--smoke) each emit a BENCH_*.json into the working directory; this module
+compares every *time-like* numeric leaf (any JSON path containing ``us_per``
+or ``ms_per``) against the same leaf in ``benchmarks/baselines/`` and always
+prints the full comparison table.
+
+**Machine normalization**: absolute wall-clock on a shared CI runner is
+dominated by the runner's speed, not the code. Per file, the gate computes
+two ratios per metric: RAW (current/baseline) and NORMALIZED (raw divided
+by the file's median raw ratio — a uniform machine-speed difference cancels
+exactly). A metric only trips the gate when BOTH exceed the threshold,
+i.e. on ``min(raw, norm)``: a metric whose raw time did not regress is not
+a regression on this runner (norm alone spikes when *other* metrics in the
+file happened to run fast — measured on this repo's own smoke benches), and
+a uniformly slower runner inflates raw but not norm. A genuine one-path
+regression inflates both.
+
+* min(raw, norm) > 1 + ``--fail-above`` (default 0.25, >25% slower) -> FAIL
+* min(raw, norm) > 1 + ``--warn-above`` (default 0.10)              -> WARN
+* missing current file / missing baseline leaf / smoke-flag mismatch -> FAIL
+* a current BENCH file with NO committed baseline (new bench suite)  -> FAIL
+  (seed it with ``--update`` in the same PR)
+Non-time leaves (byte counts, bucket shapes, speedup ratios, losses) are
+structural outputs, not step times — they are not gated here (the pytest
+suite pins their semantics).
+
+Baselines must come from the SAME bench mode they gate: every BENCH file
+records a ``smoke`` flag, and both the gate and ``--update`` refuse a
+smoke/full mismatch (committed root BENCH_*.json are full-size trajectory
+records; ``benchmarks/baselines/`` holds the smoke-run numbers CI gates on).
+
+Updating baselines: when a PR *intentionally* changes the relative cost of
+a path (new engine, different default), run the smoke benches locally and
+commit the result of ``--update`` in the same PR — the CI gate then tracks
+the new trajectory. The nightly full-bench job uploads un-gated full-size
+numbers as artifacts for the long-term perf record.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import shutil
+import statistics
+import sys
+
+BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "baselines")
+
+TIME_MARKERS = ("us_per", "ms_per")
+
+
+def _time_leaves(node, path=""):
+    """Yield (path, value) for every time-like numeric leaf."""
+    if isinstance(node, dict):
+        for k in sorted(node):
+            yield from _time_leaves(node[k], f"{path}.{k}" if path else k)
+    elif isinstance(node, (list, tuple)):
+        for i, v in enumerate(node):
+            yield from _time_leaves(v, f"{path}[{i}]")
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        if any(m in path for m in TIME_MARKERS):
+            yield path, float(node)
+
+
+def compare(baseline: dict, current: dict, *, warn_above: float,
+            fail_above: float):
+    """Rows of (path, base, cur, raw_ratio, norm_ratio, status) for one
+    bench file pair. ``norm_ratio`` divides out the per-file median
+    machine-speed factor; gating uses min(raw, norm) (module docstring)."""
+    if baseline.get("smoke") != current.get("smoke"):
+        return [("<smoke flag>", None, None, None, None, "MISMATCH")]
+    base = dict(_time_leaves(baseline))
+    cur = dict(_time_leaves(current))
+    shared = sorted(set(base) & set(cur))
+    raw = {p: (cur[p] / base[p] if base[p] else float("inf")) for p in shared}
+    # median raw ratio ~= the machine-speed factor when most paths are stable
+    scale = statistics.median(raw.values()) if raw else 1.0
+    rows = []
+    for path in sorted(set(base) | set(cur)):
+        b, c = base.get(path), cur.get(path)
+        if b is None:
+            rows.append((path, b, c, None, None, "NEW"))
+        elif c is None:
+            rows.append((path, b, c, None, None, "MISSING"))
+        else:
+            norm = raw[path] / scale if scale else float("inf")
+            trip = min(raw[path], norm)
+            status = ("FAIL" if trip > 1 + fail_above
+                      else "WARN" if trip > 1 + warn_above else "ok")
+            rows.append((path, b, c, raw[path], norm, status))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current-dir", default=".",
+                    help="where the fresh BENCH_*.json files live")
+    ap.add_argument("--baseline-dir", default=BASELINE_DIR)
+    ap.add_argument("--warn-above", type=float, default=0.10,
+                    help="warn when a normalized step time regresses by more "
+                    "than this fraction (default 0.10 = 10%%)")
+    ap.add_argument("--fail-above", type=float, default=0.25,
+                    help="fail when a normalized step time regresses by more "
+                    "than this fraction (default 0.25 = 25%%)")
+    ap.add_argument("--update", action="store_true",
+                    help="copy the current BENCH_*.json files over the "
+                    "committed baselines instead of gating (refuses a "
+                    "smoke/full mode mismatch with an existing baseline)")
+    args = ap.parse_args()
+
+    if args.update:
+        os.makedirs(args.baseline_dir, exist_ok=True)
+        fresh = sorted(os.path.basename(p) for p in
+                       glob.glob(os.path.join(args.current_dir,
+                                              "BENCH_*.json")))
+        if not fresh:
+            print("no BENCH_*.json in --current-dir; run the smoke benches "
+                  "first", file=sys.stderr)
+            sys.exit(1)
+        for name in fresh:
+            src = os.path.join(args.current_dir, name)
+            dst = os.path.join(args.baseline_dir, name)
+            if os.path.isfile(dst):
+                with open(src) as f:
+                    new_smoke = json.load(f).get("smoke")
+                with open(dst) as f:
+                    old_smoke = json.load(f).get("smoke")
+                if new_smoke != old_smoke:
+                    print(f"refusing to overwrite {name}: baseline has "
+                          f"smoke={old_smoke} but the new file has "
+                          f"smoke={new_smoke} — baselines gate the SMOKE "
+                          "benches; re-run benchmarks.run with --smoke",
+                          file=sys.stderr)
+                    sys.exit(1)
+            shutil.copyfile(src, dst)
+            print(f"baseline updated: {name}")
+        return
+
+    names = sorted(os.path.basename(p) for p in
+                   glob.glob(os.path.join(args.baseline_dir, "BENCH_*.json")))
+    if not names:
+        print(f"no baselines in {args.baseline_dir}; run with --update to "
+              "seed them", file=sys.stderr)
+        sys.exit(1)
+    # a fresh bench suite with no committed baseline must not slip through
+    # ungated: flag it so the author seeds it with --update in the same PR
+    unbaselined = sorted(
+        os.path.basename(p) for p in
+        glob.glob(os.path.join(args.current_dir, "BENCH_*.json"))
+        if os.path.basename(p) not in names)
+
+    failed, warned = [], []
+    print(f"{'file':28s} {'metric':48s} {'base':>11s} {'cur':>11s} "
+          f"{'raw':>6s} {'norm':>6s} status")
+    for name in names:
+        cur_path = os.path.join(args.current_dir, name)
+        if not os.path.isfile(cur_path):
+            print(f"{name:28s} {'<file>':48s} {'-':>11s} {'-':>11s} "
+                  f"{'-':>6s} {'-':>6s} MISSING")
+            failed.append((name, "<file missing>"))
+            continue
+        with open(os.path.join(args.baseline_dir, name)) as f:
+            baseline = json.load(f)
+        with open(cur_path) as f:
+            current = json.load(f)
+        for path, b, c, raw, norm, status in compare(
+                baseline, current, warn_above=args.warn_above,
+                fail_above=args.fail_above):
+            fb = f"{b:11.1f}" if b is not None else f"{'-':>11s}"
+            fc = f"{c:11.1f}" if c is not None else f"{'-':>11s}"
+            fr = f"{raw:6.2f}" if raw is not None else f"{'-':>6s}"
+            fn = f"{norm:6.2f}" if norm is not None else f"{'-':>6s}"
+            print(f"{name:28s} {path:48s} {fb} {fc} {fr} {fn} {status}")
+            if status in ("FAIL", "MISSING", "MISMATCH"):
+                failed.append((name, path))
+            elif status == "WARN":
+                warned.append((name, path))
+    for name in unbaselined:
+        print(f"{name:28s} {'<no baseline>':48s} {'-':>11s} {'-':>11s} "
+              f"{'-':>6s} {'-':>6s} UNBASELINED")
+        failed.append((name, "<no baseline — seed it with --update>"))
+    if warned:
+        print(f"# WARN: {len(warned)} step-time metric(s) regressed "
+              f">{args.warn_above:.0%} (machine-normalized)")
+    if failed:
+        print(f"# FAIL: {len(failed)} step-time metric(s) regressed "
+              f">{args.fail_above:.0%} (machine-normalized), or missing / "
+              "mode-mismatched; if intentional, re-baseline with --update "
+              "and commit")
+        sys.exit(1)
+    print("# bench-regression gate passed")
+
+
+if __name__ == "__main__":
+    main()

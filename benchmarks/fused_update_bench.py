@@ -83,7 +83,7 @@ def _modeled_bytes(layout, *, fused: bool, momentum: bool = True) -> dict:
 
 
 def rows(smoke: bool = False):
-    iters = 4 if smoke else 20
+    iters = 8 if smoke else 20
     cfg = reduced(get_config("stablelm-1.6b"),
                   n_layers=8 if smoke else 24, d_model=128)
     params, _ = lm_init(jax.random.key(0), cfg)

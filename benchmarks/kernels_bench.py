@@ -38,7 +38,7 @@ def gossip_engine_rows(smoke: bool = False):
     identical jnp in all three, so the measurement isolates the packing
     strategy: per-leaf = n_leaves launches, old fused = concat + fp32 casts +
     split EVERY step, packed = pre-packed dtype-native buckets, mix only."""
-    iters = 4 if smoke else 20
+    iters = 8 if smoke else 20
     cfg = reduced(get_config("stablelm-1.6b"),
                   n_layers=8 if smoke else 24, d_model=128)
     params, _ = lm_init(jax.random.key(0), cfg)

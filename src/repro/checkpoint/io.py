@@ -10,7 +10,12 @@ Bucketed gossip state (core.buckets.PackedParams) is read THROUGH the view
 layer: save unpacks every PackedParams node to its named leaf tree before
 writing, and restore re-packs after reading. The on-disk format is therefore
 identical between the packed and per-leaf engines — a packed run can restore
-a leaf checkpoint and vice versa.
+a leaf checkpoint and vice versa. This extends to SHARD-LOCAL (hierarchical
+fsdp/TP) layouts: unpack reassembles each leaf from its per-shard pieces on
+the host (zero-copy numpy views + np.concatenate) and restore re-packs into
+whatever layout the template carries, so fsdp-packed, pure_dp-packed, and
+per-leaf checkpoints all cross-restore freely — including the inbox ring's
+PackedParams slots (tests/test_hier_packed.py).
 
 Asynchronous gossip state: the staleness-k inbox ring (``state["inbox"]`` =
 ``{"slots": (k param-shaped trees, oldest first), "valid": (dp, k) mask,

@@ -5,7 +5,7 @@ from .topology import (GossipSchedule, build_schedule, diffusion_steps,
 from .mixing import (consensus_contraction, is_doubly_stochastic,
                      mixing_matrix, round_matrix, spectral_gap)
 from .buckets import (BucketLayout, LeafSlot, PackedParams, build_layout,
-                      packed_param_specs)
+                      check_layout_mesh, packed_param_specs)
 from .gossip import (gossip_bytes_per_step, linear_pairs, make_gossip_mix,
                      make_packed_fused_update, make_packed_gossip_mix)
 from .async_gossip import (exchange_ok, inbox_ring_specs, init_inbox_ring,

@@ -72,7 +72,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from .buckets import BucketLayout, PackedParams, packed_param_specs
+from .buckets import (BucketLayout, PackedParams, check_layout_mesh,
+                      packed_param_specs)
 from .gossip import (fused_opt_state_specs, linear_pairs,
                      packed_fused_local_update)
 from .topology import GossipSchedule
@@ -274,9 +275,12 @@ def make_packed_async_gossip_mix(
     Both the live params and every ring slot are PackedParams over the same
     layout: the slots are literally the last k steps' wire buffers, kept
     resident. Each step issues one ppermute + one (donatable, in-place,
-    masked-alpha) mix per bucket; the same sharding restriction as the sync
-    packed engine applies (replica axis only — pure_dp / smoke meshes).
+    masked-alpha) mix per bucket; shard-local layouts (fsdp / TP inside a
+    replica) are legal exactly as in the sync packed engine — the bucket
+    flat dim shards over the in-replica axes and the ppermute runs over the
+    replica axes only (``check_layout_mesh`` validates the agreement).
     """
+    check_layout_mesh(layout, mesh)
     specs = packed_param_specs(layout, tuple(axis_names))
     return make_async_gossip_mix(mesh, axis_names, schedule, specs,
                                  alpha=alpha, staleness=staleness,
@@ -332,6 +336,7 @@ def make_packed_fused_async_update(
     if staleness < 1:
         raise ValueError(f"gossip_async needs staleness >= 1, got {staleness}")
     k = int(staleness)
+    check_layout_mesh(layout, mesh)
     specs = packed_param_specs(layout, axis_names)
     ring_specs = inbox_ring_specs(specs, axis_names, k)
     local = packed_fused_local_update(layout, optimizer, alpha=alpha,

@@ -55,7 +55,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from .buckets import BucketLayout, PackedParams, packed_param_specs
+from .buckets import (BucketLayout, PackedParams, check_layout_mesh,
+                      packed_param_specs)
 from .topology import GossipSchedule
 
 PyTree = Any
@@ -172,10 +173,15 @@ def make_packed_gossip_mix(
     (``mix_impl`` defaults to plain jnp; pass kernels.gossip_mix_bucket for
     the donation-friendly Pallas path).
 
-    Packing flattens each replica, so the layout is only sharding-compatible
-    with distributions that shard nothing beyond the replica axis (pure_dp /
-    smoke meshes); tensor-parallel `replica`-mode keeps the per-leaf path.
+    Layouts sharded INSIDE a replica (fsdp / tensor parallelism) are legal
+    when the layout is shard-local (built with the distribution's in-replica
+    axes — core.buckets): the bucket flat dim then shards over those axes so
+    each device's local block is its own shard bytes, and the ppermute still
+    runs over the replica axes only. ``check_layout_mesh`` validates the
+    layout/mesh agreement (the shard-aware successor of the old "only
+    sharded on the replica axis" guard).
     """
+    check_layout_mesh(layout, mesh)
     specs = packed_param_specs(layout, tuple(axis_names))
     return make_gossip_mix(mesh, axis_names, schedule, specs, alpha=alpha,
                            mode=mode, mix_impl=mix_impl)
@@ -270,6 +276,7 @@ def make_packed_fused_update(
     body shape for every phase of every protocol.
     """
     axis_names = tuple(axis_names)
+    check_layout_mesh(layout, mesh)
     specs = packed_param_specs(layout, axis_names)
     local = packed_fused_local_update(layout, optimizer,
                                       alpha=alpha if schedule is not None

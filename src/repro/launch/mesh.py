@@ -31,7 +31,15 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
                          devices=devs[:n])
 
 
-def make_smoke_mesh(data: int = 1, model: int = 1) -> Mesh:
-    """Tiny mesh over however many (possibly forced-host) devices exist."""
+def make_smoke_mesh(data: int = 1, model: int = 1, pod: int = 1) -> Mesh:
+    """Tiny mesh over however many (possibly forced-host) devices exist.
+
+    ``pod > 1`` adds a leading ``pod`` axis — the hierarchical (fsdp-mode)
+    gossip domain — so the shard-local packed engine can run on forced-host
+    CPU devices (set ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    before any jax import)."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
+                             axis_types=(AxisType.Auto,) * 3)
     return jax.make_mesh((data, model), ("data", "model"),
                          axis_types=(AxisType.Auto,) * 2)

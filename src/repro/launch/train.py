@@ -66,6 +66,12 @@ def main() -> None:
                     "composition)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config on the local device mesh")
+    ap.add_argument("--smoke-mesh", default="1,1,1", metavar="POD,DATA,MODEL",
+                    help="smoke-mesh axis sizes; pod>1 or data/model>1 need "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=N set "
+                    "before launch. With an fsdp-mode arch this exercises "
+                    "the hierarchical shard-local packed engine on CPU "
+                    "(gossip over pod, FSDP+TP over data/model)")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--d-model", type=int, default=128)
     ap.add_argument("--checkpoint", default=None)
@@ -83,7 +89,8 @@ def main() -> None:
         cfg = dataclasses.replace(
             reduced(cfg, d_model=args.d_model),
             param_dtype="float32", compute_dtype="float32")
-        mesh = make_smoke_mesh(1, 1)
+        pod, data, model = (int(x) for x in args.smoke_mesh.split(","))
+        mesh = make_smoke_mesh(data, model, pod=pod)
     else:
         mesh = make_production_mesh(multi_pod=args.multi_pod)
     dist = make_distribution(mesh, cfg.dist_mode)

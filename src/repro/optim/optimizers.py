@@ -51,6 +51,11 @@ class Optimizer:
     # ``impl`` the kernel backend override (see kernels.ops).  None when
     # the optimizer has no fused backend.
     fused_update: Callable | None = None
+    # False when the fused backend cannot run on shard-local (hierarchical)
+    # bucket layouts — lars: its per-layer norm prepass would need a
+    # cross-shard reduction inside shard_map. Such optimizers fall back to
+    # the unfused mix-then-apply composition under fsdp/TP packing.
+    fused_shard_local: bool = True
 
 
 def sgd(schedule: Schedule | float, momentum: float = 0.9,
@@ -108,6 +113,15 @@ def _lars_row_scale(layout, bucket_idx: int, p, g, partner, *, alpha: float,
     """
     import numpy as np
 
+    if getattr(layout, "num_shards", 1) > 1:
+        raise ValueError(
+            "lars has no fused backend for shard-local (hierarchical) "
+            "layouts: the trust ratio needs per-LAYER norms, but inside "
+            "shard_map each device holds only its own shard of every layer "
+            "(a cross-shard norm reduction would break the single-sweep "
+            "contract); use sgd/adamw, or lars with fused_update=False "
+            "(its tree-level packed update reads global norms through the "
+            "unpack view at the jit level)")
     # traced alpha (masked-alpha path of the bounded-delay runtime) always
     # mixes; only a static 0 drops the partner term from the prepass
     use_partner = partner is not None and not (
@@ -232,7 +246,8 @@ def lars(schedule: Schedule | float, momentum: float = 0.9,
         return new_p, (new_m,)
 
     return Optimizer(init, update, elementwise=False, packed_aware=True,
-                     fused_moments=("mom",), fused_update=fused_update)
+                     fused_moments=("mom",), fused_update=fused_update,
+                     fused_shard_local=False)
 
 
 def adamw(schedule: Schedule | float, b1: float = 0.9, b2: float = 0.95,

@@ -83,6 +83,14 @@ class Distribution:
         else:
             self.dp_axes = ("pod",) if self.multi_pod else ()
         self.dp = int(np.prod([mesh.shape[a] for a in self.dp_axes])) if self.dp_axes else 1
+        # mesh axes that shard INSIDE a replica (fsdp's data/model, replica
+        # mode's model axis) — the shard axes of hierarchical (shard-local)
+        # bucket layouts. Size-1 axes shard nothing and are dropped.
+        self.shard_axes: Tuple[str, ...] = tuple(
+            a for a in self.axis_names
+            if a not in self.dp_axes and int(mesh.shape[a]) > 1)
+        self.shard_axis_sizes: Tuple[int, ...] = tuple(
+            int(mesh.shape[a]) for a in self.shard_axes)
 
     # -------------------------------------------------- parameter specs
     def leaf_spec(self, shape: Tuple[int, ...], annotation: str,

@@ -121,6 +121,11 @@ def init_train_state(key, cfg: ModelConfig, dist: Distribution,
     params, axes = lm_init(key, cfg)
     params = _replicate_tree(params, max(dist.dp, 1))
     if packed:
+        if layout is None and dist.shard_axes:
+            raise ValueError(
+                "this distribution shards inside a replica "
+                f"(axes {dist.shard_axes}); packed init needs the bundle's "
+                "shard-local layout — pass layout=bundle.layout")
         params = (PackedParams.pack(params, skip_leading=1) if layout is None
                   else PackedParams.pack(params, layout))
     axes = jax.tree.map(lambda s: "," + s, axes)
@@ -184,7 +189,13 @@ def make_train_step_bundle(
     one ppermute + in-place Pallas mix per bucket. ELEMENTWISE optimizers
     (sgd, adamw) are packed-transparent; norm-based optimizers must declare
     ``packed_aware`` and read their per-leaf norms through the
-    ``PackedParams.unpack()`` view (lars does).
+    ``PackedParams.unpack()`` view (lars does).  Distributions that shard
+    inside a replica (fsdp's FSDP+TP, replica-mode tensor parallelism) get a
+    SHARD-LOCAL layout: each (data, model) position packs its own shard
+    bytes into the buckets, the bucket flat dim shards over
+    ``dist.shard_axes``, and gossip still ppermutes over the replica axes
+    only — the hierarchical GossipGraD regime (pods gossip, each pod holds
+    one sharded copy).
 
     ``staleness`` (gossip_async only) is the inbox-ring depth k — the
     bounded delay of the async runtime: the exchange dispatched at step t
@@ -219,8 +230,8 @@ def make_train_step_bundle(
                 "through the PackedParams.unpack() view, so they would span "
                 "whole buckets instead of layers; use sgd/adamw/lars or the "
                 "per-leaf gossip path")
-        _check_packable(mesh, param_specs)
-        layout = build_layout(state_shapes["params"], skip_leading=1)
+        layout = _build_packed_layout(dist, state_shapes["params"],
+                                      param_specs)
         packed_shapes = jax.eval_shape(
             lambda t: PackedParams(layout.pack(t), layout),
             state_shapes["params"])
@@ -233,8 +244,11 @@ def make_train_step_bundle(
             from repro.kernels import gossip_mix_bucket
             mix_impl = gossip_mix_bucket
 
+    shard_local_ok = (layout is None or layout.num_shards == 1
+                      or getattr(optimizer, "fused_shard_local", True))
     if fused_update is None:
-        fused_update = gossip_packed and optimizer.fused_update is not None
+        fused_update = (gossip_packed and optimizer.fused_update is not None
+                        and shard_local_ok)
     if fused_update and not gossip_packed:
         raise ValueError("fused_update needs the bucketed engine: pass "
                          "gossip_packed=True")
@@ -242,6 +256,11 @@ def make_train_step_bundle(
         raise ValueError(
             "fused_update=True but this optimizer has no fused backend; "
             "use sgd/adamw/lars or fused_update=False")
+    if fused_update and not shard_local_ok:
+        raise ValueError(
+            "fused_update=True but this optimizer's fused backend does not "
+            "support shard-local (hierarchical) bucket layouts; use "
+            "sgd/adamw or fused_update=False")
 
     proto = make_protocol(
         protocol, mesh, dist.dp_axes, param_specs,
@@ -350,20 +369,44 @@ def make_train_step_bundle(
         layout=layout, fused=fused_update)
 
 
-def _check_packable(mesh, param_specs: PyTree) -> None:
-    """Packing flattens each replica, so every non-replica dim must be
-    effectively unsharded (axis absent or of size 1) — pure_dp / smoke."""
+def _build_packed_layout(dist: Distribution, param_shapes: PyTree,
+                         param_specs: PyTree):
+    """Shard-aware successor of the old "only sharded on the replica axis"
+    guard: distributions that shard nothing inside a replica (pure_dp /
+    smoke) get the flat PR-1 layout; distributions that do (fsdp's FSDP+TP,
+    replica-mode tensor parallelism) get a SHARD-LOCAL layout keyed by
+    (leaf, shard_index) — each in-replica mesh position packs its own shard
+    bytes, and the bucket flat dim shards over ``dist.shard_axes``. A spec
+    that uses a replica axis beyond the leading dim is still rejected (it
+    would alias replica bytes into the shard partition)."""
     from jax.sharding import PartitionSpec
-    for spec in jax.tree.leaves(
-            param_specs, is_leaf=lambda x: isinstance(x, PartitionSpec)):
-        if not isinstance(spec, PartitionSpec):
+    is_spec = lambda x: isinstance(x, PartitionSpec)
+    for spec in jax.tree.leaves(param_specs, is_leaf=is_spec):
+        if not is_spec(spec):
             continue
         for dim in tuple(spec)[1:]:
             axes = dim if isinstance(dim, tuple) else (dim,) if dim else ()
             for ax in axes:
-                if mesh.shape[ax] != 1:
+                if ax in dist.dp_axes and dist.mesh.shape[ax] != 1:
                     raise ValueError(
-                        "gossip_packed requires params sharded only on the "
-                        f"replica axis, but a leaf uses mesh axis {ax!r} "
-                        f"(size {mesh.shape[ax]}); use dist_mode='pure_dp' "
-                        "or keep the per-leaf gossip path")
+                        f"a non-leading param dim is sharded on replica "
+                        f"axis {ax!r}; the packed engine cannot represent "
+                        "this — keep the per-leaf gossip path")
+    if not dist.shard_axes:
+        return build_layout(param_shapes, skip_leading=1)
+
+    def inner(spec):
+        # drop size-1 mesh axes: they shard nothing and are not part of the
+        # layout's shard decomposition
+        dims = []
+        for dim in tuple(spec)[1:]:
+            axes = dim if isinstance(dim, tuple) else (dim,) if dim else ()
+            kept = tuple(a for a in axes if a in dist.shard_axes)
+            dims.append(kept if len(kept) > 1 else kept[0] if kept else None)
+        return PartitionSpec(*dims)
+
+    inner_specs = jax.tree.map(inner, param_specs, is_leaf=is_spec)
+    return build_layout(param_shapes, skip_leading=1,
+                        shard_axes=dist.shard_axes,
+                        shard_axis_sizes=dist.shard_axis_sizes,
+                        shard_specs=inner_specs)
