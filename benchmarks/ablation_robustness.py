@@ -9,7 +9,11 @@
 * staleness-k / async drop — the bounded-delay inbox-ring runtime's
   convergence curve: final loss and replica drift vs ring depth k and
   injected skip-on-timeout rate (the GoSGD / Jin et al. bounded-staleness
-  picture: accuracy holds for k > 1 delay, degrades gently with drops).
+  picture: accuracy holds for k > 1 delay, degrades gently with drops);
+* compressed / sampled wire — int8 stochastic-rounded payloads and 50%
+  partition-sampled exchanges on the bounded-delay ring (the wire-format
+  suffixes of benchmarks.common.parse_async_protocol): convergence holds
+  under 4x and 8x fewer wire bytes per exchange.
 """
 from __future__ import annotations
 
@@ -84,4 +88,12 @@ def rows():
         l, v = _run_async(4, drop_pct=dp)
         out.append((f"ablate_async_k4_drop{dp}_p{P}", l * 1e6,
                     f"loss={l:.4f};replica_var={v:.2e}"))
+    # compressed + partition-sampled wire: one quantized, one sampled
+    for proto in ("gossip_async_k2_q8", "gossip_async_k2_sub50"):
+        hist, _ = run_replica_lm(P, proto, STEPS, seq_len=32,
+                                 batch_per_replica=4, lr=0.3, seed=3)
+        l = float(np.mean([h["loss"] for h in hist[-10:]]))
+        v = hist[-1]["replica_variance"]
+        out.append((f"ablate_{proto.replace('gossip_async', 'wire')}_p{P}",
+                    l * 1e6, f"loss={l:.4f};replica_var={v:.2e}"))
     return out

@@ -5,8 +5,8 @@ baselines.
     PYTHONPATH=src python -m benchmarks.check_regression             # gate
     PYTHONPATH=src python -m benchmarks.check_regression --update    # re-baseline
 
-The smoke benchmarks (benchmarks.run --only {kernels,async,update,straggler}
---smoke) each emit a BENCH_*.json into the working directory; this module
+The smoke benchmarks (benchmarks.run --only {kernels,async,update,straggler,
+wire} --smoke) each emit a BENCH_*.json into the working directory; this module
 compares every *time-like* numeric leaf (any JSON path containing ``us_per``
 or ``ms_per``) against the same leaf in ``benchmarks/baselines/`` and always
 prints the full comparison table.
@@ -26,7 +26,9 @@ regression inflates both.
 * min(raw, norm) > 1 + ``--warn-above`` (default 0.10)              -> WARN
 * missing current file / missing baseline leaf / smoke-flag mismatch -> FAIL
 * a current BENCH file with NO committed baseline (new bench suite)  -> FAIL
-  (seed it with ``--update`` in the same PR)
+  (seed it with ``--update`` in the same PR); ``--allow-new`` demotes
+  this one case to a WARN that prints the seeding command — for runs
+  mid-PR where the new suite exists but its baseline is not written yet
 Non-time leaves (byte counts, bucket shapes, speedup ratios, losses) are
 structural outputs, not step times — they are not gated here (the pytest
 suite pins their semantics).
@@ -115,6 +117,10 @@ def main() -> None:
                     help="copy the current BENCH_*.json files over the "
                     "committed baselines instead of gating (refuses a "
                     "smoke/full mode mismatch with an existing baseline)")
+    ap.add_argument("--allow-new", action="store_true",
+                    help="WARN (instead of FAIL) on a current BENCH file "
+                    "with no committed baseline, printing the --update "
+                    "command that seeds it — existing baselines still gate")
     args = ap.parse_args()
 
     if args.update:
@@ -185,9 +191,17 @@ def main() -> None:
             elif status == "WARN":
                 warned.append((name, path))
     for name in unbaselined:
+        status = "UNBASELINED-WARN" if args.allow_new else "UNBASELINED"
         print(f"{name:28s} {'<no baseline>':48s} {'-':>11s} {'-':>11s} "
-              f"{'-':>6s} {'-':>6s} UNBASELINED")
-        failed.append((name, "<no baseline — seed it with --update>"))
+              f"{'-':>6s} {'-':>6s} {status}")
+        if args.allow_new:
+            print(f"# WARN: {name} has no committed baseline; seed it with\n"
+                  f"#   PYTHONPATH=src python -m benchmarks.check_regression "
+                  f"--update --current-dir {args.current_dir}\n"
+                  f"# and commit benchmarks/baselines/{name} in this PR")
+            warned.append((name, "<no baseline>"))
+        else:
+            failed.append((name, "<no baseline — seed it with --update>"))
     if warned:
         print(f"# WARN: {len(warned)} step-time metric(s) regressed "
               f">{args.warn_above:.0%} (machine-normalized)")

@@ -35,15 +35,29 @@ def tiny_lm_cfg(d_model=64, vocab=128):
                                compute_dtype="float32")
 
 
+_WIRE_SUFFIXES = {"8": "int8", "f8": "fp8", "b16": "bf16"}
+
+
 def parse_async_protocol(protocol: str):
-    """``gossip_async[_k<K>][_drop<PCT>]`` -> (staleness, drop_rate) or None
-    for non-async protocols — the bounded-delay sweep naming used by the
-    ablation/straggler benches and examples/gossip_vs_agd.py (e.g.
-    ``gossip_async_k4_drop30`` = staleness-4 ring, 30% injected drops)."""
-    m = re.fullmatch(r"gossip_async(?:_k(\d+))?(?:_drop(\d+))?", protocol)
+    """``gossip_async[_k<K>][_drop<PCT>][_q<WIRE>][_sub<PCT>]`` ->
+    (staleness, drop_rate, wire_dtype, gossip_subset) or None for non-async
+    protocols — the bounded-delay sweep naming used by the ablation /
+    straggler / wire benches and examples/gossip_vs_agd.py.  Examples:
+
+        gossip_async_k4_drop30   staleness-4 ring, 30% injected drops
+        gossip_async_k2_q8       staleness-2, int8 stochastic-rounded wire
+        gossip_async_qf8_sub50   fp8-e4m3 wire, 50% partition-sampled buckets
+        gossip_async_k4_q8_sub50 all of the above combined
+
+    ``_q8`` -> int8, ``_qf8`` -> fp8, ``_qb16`` -> bf16 (no suffix = fp32);
+    ``_sub<PCT>`` -> gossip_subset = PCT / 100."""
+    m = re.fullmatch(r"gossip_async(?:_k(\d+))?(?:_drop(\d+))?"
+                     r"(?:_q(8|f8|b16))?(?:_sub(\d+))?", protocol)
     if not m:
         return None
-    return int(m.group(1) or 1), int(m.group(2) or 0) / 100.0
+    return (int(m.group(1) or 1), int(m.group(2) or 0) / 100.0,
+            _WIRE_SUFFIXES.get(m.group(3), "fp32"),
+            int(m.group(4) or 100) / 100.0)
 
 
 def make_replica_lm(p: int, protocol: str, *, lr=0.3, seed=0,
@@ -60,9 +74,12 @@ def make_replica_lm(p: int, protocol: str, *, lr=0.3, seed=0,
     opt = sgd(lr, momentum=0.9)
     async_kd = parse_async_protocol(protocol)
     if async_kd is not None:
-        k, drop = async_kd
+        k, drop, wire_dtype, subset = async_kd
         step = make_async_sim_train_step(loss_fn, opt, sched, staleness=k,
-                                         drop_rate=drop, drop_seed=seed)
+                                         drop_rate=drop, drop_seed=seed,
+                                         wire_dtype=wire_dtype,
+                                         gossip_subset=subset,
+                                         wire_seed=seed)
     else:
         step = make_sim_train_step(loss_fn, opt, sched, protocol=protocol)
     params = replicate(params, p)

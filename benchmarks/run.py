@@ -15,6 +15,9 @@ suite). Figure/table mapping:
     fused_update_bench — fused mix+apply vs mix-then-apply update engine
     straggler_bench    — bounded-delay runtime: step time + drift vs
                          staleness k and drop rate (skip-on-timeout)
+    wire_bench         — compressed + partition-sampled wire: bytes/step,
+                         step time on an emulated interconnect, drift vs
+                         (wire dtype, bucket-subset fraction)
     ablation_robustness— beyond-paper: grad-vs-model gossip, dropped
                          exchanges, staleness-k convergence
 
@@ -36,6 +39,7 @@ SUITES = [
     "async_bench",
     "fused_update_bench",
     "straggler_bench",
+    "wire_bench",
     "ablation_robustness",
 ]
 

@@ -3,8 +3,10 @@ all-reduce SGD, (a) analytically across p, (b) measured from the compiled
 dry-run HLO (collective-permute vs all-reduce bytes in the train step),
 (c) the bucketed-engine packing economics on the FULL-size 1.6B config:
 launches and bytes moved per gossip step for packed vs per-leaf vs the old
-fused fp32-scratch path, and (d) the fused mix+apply engine's memory-traffic
-table: HBM passes/bytes per update step before and after fusion."""
+fused fp32-scratch path, (d) the fused mix+apply engine's memory-traffic
+table: HBM passes/bytes per update step before and after fusion, and (e) the
+compressed + partition-sampled wire economics: exact exchange bytes per wire
+format x bucket-subset fraction on the same 1.6B layout."""
 from __future__ import annotations
 
 import glob
@@ -15,8 +17,9 @@ import os
 import jax
 import numpy as np
 
-from repro.core import gossip_bytes_per_step
+from repro.core import gossip_bytes_per_step, wire_bytes_per_step
 from repro.core.buckets import build_layout
+from repro.kernels.quantize import WireFormat
 from .common import HBM, ICI
 
 
@@ -46,6 +49,36 @@ def packed_engine_rows():
          f"launches=1;bytes={fused_bytes:.3e};fp32_scratch+"
          "per_step_pack_unpack"),
     ]
+
+
+def wire_rows():
+    """Compressed + partition-sampled wire economics on the FULL-size 1.6B
+    config (eval_shape only): exact per-chip bytes of one packed gossip
+    exchange for each wire format x bucket-subset fraction, from
+    core.gossip.wire_bytes_per_step.  ``codes`` is the headline compression
+    of the ppermuted payload (int8 = 4x, int8 + 50%% sampling = 8x); the
+    per-128-tile fp32 scales ride the coefficient block and are counted in
+    ``total``.  The 'time' column is total bytes / ICI bandwidth — the
+    wire-bound floor of one exchange on a v5e chip."""
+    from repro.configs import get_config
+    from repro.models import lm_init
+
+    cfg = get_config("stablelm-1.6b")
+    shapes = jax.eval_shape(lambda: lm_init(jax.random.key(0), cfg)[0])
+    layout = build_layout(shapes)
+    out = []
+    for wd in ("fp32", "bf16", "int8"):
+        for frac in (1.0, 0.5):
+            acct = wire_bytes_per_step(
+                layout, WireFormat(dtype=wd, subset=frac))
+            sub = f"_sub{int(frac * 100)}" if frac < 1.0 else ""
+            out.append((
+                f"table1_wire_{wd}{sub}_bytes_1p6b",
+                acct["total_bytes"] / ICI * 1e6,
+                f"bytes={acct['total_bytes']:.3e};"
+                f"codes={acct['reduction_codes']:.2f}x;"
+                f"total={acct['reduction_total']:.2f}x"))
+    return out
 
 
 def update_traffic_rows():
@@ -95,6 +128,7 @@ def update_traffic_rows():
 def rows():
     out = []
     out.extend(packed_engine_rows())
+    out.extend(wire_rows())
     out.extend(update_traffic_rows())
     replica_bytes = 2 * 600e6  # qwen3-0.6b bf16
     for p in (4, 8, 16, 32, 64, 128, 256, 512):

@@ -29,12 +29,17 @@ def main():
     ap.add_argument("--preset", default=None, choices=[None, "100m"])
     ap.add_argument("--protocols",
                     default="gossip,gossip_async,gossip_async_k4,"
-                    "gossip_async_k2_drop20,agd,every_logp",
-                    help="comma list; gossip_async[_k<K>][_drop<PCT>] is "
-                    "the bounded-delay inbox-ring protocol (§4.2/§5): "
-                    "staleness-K ring (default 1) with PCT%% injected "
-                    "skip-on-timeout drops — same convergence, comm off "
-                    "the critical path, late exchanges skipped")
+                    "gossip_async_k2_drop20,gossip_async_k2_q8,"
+                    "gossip_async_k2_sub50,agd,every_logp",
+                    help="comma list; gossip_async[_k<K>][_drop<PCT>]"
+                    "[_q<WIRE>][_sub<PCT>] is the bounded-delay inbox-ring "
+                    "protocol (§4.2/§5): staleness-K ring (default 1) with "
+                    "PCT%% injected skip-on-timeout drops — same "
+                    "convergence, comm off the critical path, late "
+                    "exchanges skipped. _q8/_qf8/_qb16 ship int8/fp8/bf16 "
+                    "compressed payloads (4x/4x/2x fewer wire bytes), "
+                    "_sub<PCT> partition-samples a rotating PCT%% bucket "
+                    "subset per exchange")
     args = ap.parse_args()
 
     from benchmarks.common import run_replica_lm
@@ -78,8 +83,11 @@ def main():
                  / max(results["gossip"]["replica_variance"], 1e-12))
         print(f"async-vs-sync gossip: loss gap {gap:.4f}, drift ratio "
               f"{drift:.2f}x (staleness-1 stays bounded, §5)")
+    wired = [(p, r) for p, r in results.items()
+             if p.startswith("gossip_async") and ("_q" in p or "_sub" in p)]
     stale = [(p, r) for p, r in results.items()
-             if p.startswith("gossip_async") and p != "gossip_async"]
+             if p.startswith("gossip_async") and p != "gossip_async"
+             and (p, r) not in wired]
     if "gossip" in results and stale:
         for proto, r in stale:
             gap = abs(results["gossip"]["final_loss"] - r["final_loss"])
@@ -88,6 +96,14 @@ def main():
             print(f"bounded-delay {proto}: loss gap {gap:.4f} vs sync, "
                   f"drift ratio {drift:.2f}x (accuracy holds under k>1 "
                   f"delay and skipped exchanges, §4.2)")
+    if "gossip" in results and wired:
+        for proto, r in wired:
+            gap = abs(results["gossip"]["final_loss"] - r["final_loss"])
+            drift = (r["replica_variance"]
+                     / max(results["gossip"]["replica_variance"], 1e-12))
+            print(f"compressed wire {proto}: loss gap {gap:.4f} vs sync, "
+                  f"drift ratio {drift:.2f}x (convergence holds under "
+                  f"quantized / partition-sampled exchanges)")
     print(json.dumps(results, indent=1))
 
 

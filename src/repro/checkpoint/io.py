@@ -34,6 +34,16 @@ semantics). A deeper checkpoint (k=4 -> k=1 run) is truncated to the oldest
 slots: the newer in-flight payloads are "lost on the wire", which gossip
 tolerates by design (§4.2). Legacy PR-2 checkpoints (a bare staleness-1
 inbox tree, no ring keys) restore as a one-slot ring with a valid mask.
+
+Compressed-wire rings (core.async_gossip.init_wire_inbox_ring): int8 codes
+save natively, fp8/bf16 stage as f32 (lossless — every e4m3/bf16 value is
+exactly f32-representable) with the true dtype recorded in the manifest.
+Cross-WIRE-FORMAT restore (fp32-wire ring <-> compressed ring, either
+direction) cannot adapt slot-by-slot — the payload structures differ — so
+the params/opt subtrees restore strictly and the ring resets to the
+template's bootstrap with t = the manifest step (the first k mixes after
+the crossover are skips; dispatch-keyed noise and the bucket-subset
+rotation stay aligned with the resumed gossip phase).
 """
 from __future__ import annotations
 
@@ -215,11 +225,34 @@ def restore_state(path: str, template: PyTree) -> Tuple[PyTree, Dict]:
     # materialize a full unpacked copy of the packed state on device
     template = jax.eval_shape(_unpack_view, template)
     keyed, _ = _flatten(template)
+    ring_reset = False
     if set(keyed) != set(arrays):
-        missing = sorted(set(keyed) - set(arrays))[:5]
-        extra = sorted(set(arrays) - set(keyed))[:5]
-        raise ValueError(f"checkpoint/template mismatch; missing={missing} "
-                         f"extra={extra}")
+        # cross-WIRE-FORMAT inbox: a ring of compressed payloads (codes +
+        # scales) and a ring of raw params flatten to different key sets, so
+        # no slot-level adaptation is possible. When the mismatch is confined
+        # to the inbox subtree, restore everything else strictly and RESET
+        # the ring to the template's bootstrap (all slots as initialized,
+        # valid zeroed, t = the manifest step so the dispatch-keyed noise
+        # and subset rotation resume in lockstep with the gossip phase) —
+        # the first k mixes after the crossover are skips, which the
+        # protocol's own drop semantics already tolerate.
+        t_rest = {k for k in keyed if not k.startswith("['inbox']")}
+        c_rest = {k for k in arrays if not k.startswith("['inbox']")}
+        if (t_rest == c_rest and isinstance(packed_template, dict)
+                and "inbox" in packed_template
+                and _is_ring(packed_template["inbox"])):
+            ring_reset = True
+            ring_adapt = None
+            template = {k: v for k, v in template.items() if k != "inbox"}
+            keyed = {k: v for k, v in keyed.items()
+                     if not k.startswith("['inbox']")}
+            arrays = {k: v for k, v in arrays.items()
+                      if not k.startswith("['inbox']")}
+        else:
+            missing = sorted(set(keyed) - set(arrays))[:5]
+            extra = sorted(set(arrays) - set(keyed))[:5]
+            raise ValueError(f"checkpoint/template mismatch; "
+                             f"missing={missing} extra={extra}")
     leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(template)
     out = []
     for pth, leaf in leaves_with_path:
@@ -242,4 +275,14 @@ def restore_state(path: str, template: PyTree) -> Tuple[PyTree, Dict]:
                     "t": np.asarray(int(manifest.get("step") or 0),
                                     np.int32)}
         restored = dict(restored, inbox=_adapt_ring(ring, k_t))
+    if ring_reset:
+        rest_tpl = {k: v for k, v in packed_template.items() if k != "inbox"}
+        out = _pack_like(rest_tpl, restored)
+        tpl_ring = packed_template["inbox"]
+        out["inbox"] = {
+            "slots": tpl_ring["slots"],
+            "valid": np.zeros(np.shape(tpl_ring["valid"]), np.float32),
+            "t": np.asarray(int(manifest.get("step") or 0), np.int32),
+        }
+        return out, manifest
     return _pack_like(packed_template, restored), manifest

@@ -1,5 +1,6 @@
 """GossipGraD core: topologies, mixing analysis, distributed gossip, protocols."""
-from .topology import (GossipSchedule, build_schedule, diffusion_steps,
+from .topology import (BucketSubsetSchedule, GossipSchedule,
+                       build_schedule, build_subset_schedule, diffusion_steps,
                        dissemination_partner, hypercube_partner, log2_steps,
                        reachability, ring_partner)
 from .mixing import (consensus_contraction, is_doubly_stochastic,
@@ -7,14 +8,17 @@ from .mixing import (consensus_contraction, is_doubly_stochastic,
 from .buckets import (BucketLayout, LeafSlot, PackedParams, build_layout,
                       check_layout_mesh, packed_param_specs)
 from .gossip import (gossip_bytes_per_step, linear_pairs, make_gossip_mix,
-                     make_packed_fused_update, make_packed_gossip_mix)
+                     make_packed_fused_update, make_packed_gossip_mix,
+                     wire_bytes_per_step, wire_period, wire_subset_of)
 from .async_gossip import (exchange_ok, inbox_ring_specs, init_inbox_ring,
-                           make_async_gossip_mix,
+                           init_wire_inbox_ring, make_async_gossip_mix,
                            make_packed_async_gossip_mix,
-                           make_packed_fused_async_update)
+                           make_packed_fused_async_update,
+                           wire_inbox_ring_specs)
 from .protocols import PROTOCOLS, Protocol, make_protocol
 from .shuffle import RingShardRotation, make_ring_shuffle
 from .simulate import (allreduce_mean_sim, gossip_mix_sim,
                        gossip_mix_sim_delayed, gossip_mix_sim_delayed_k,
-                       gossip_mix_sim_masked, make_async_sim_train_step,
+                       gossip_mix_sim_masked, gossip_mix_sim_quantized,
+                       gossip_mix_sim_quantized_k, make_async_sim_train_step,
                        make_sim_train_step, replica_variance, replicate)

@@ -72,15 +72,20 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.kernels.quantize import (WireFormat, payload_spec,
+                                    zero_payload_like)
+
 from .buckets import (BucketLayout, PackedParams, check_layout_mesh,
                       packed_param_specs)
-from .gossip import (fused_opt_state_specs, linear_pairs,
-                     packed_fused_local_update)
+from .gossip import (_encode_bucket, _wire_mix_one, fused_opt_state_specs,
+                     linear_pairs, packed_fused_local_update, wire_period,
+                     wire_subset_of)
 from .topology import GossipSchedule
 
 PyTree = Any
 
 __all__ = ["exchange_ok", "init_inbox_ring", "inbox_ring_specs",
+           "init_wire_inbox_ring", "wire_inbox_ring_specs",
            "make_async_gossip_mix", "make_packed_async_gossip_mix",
            "make_packed_fused_async_update"]
 
@@ -141,6 +146,41 @@ def inbox_ring_specs(param_specs: PyTree, dp_axes: Sequence[str],
     front = (dp_axes if len(dp_axes) > 1 else dp_axes[0]) if dp_axes else None
     return {
         "slots": tuple(param_specs for _ in range(int(staleness))),
+        "valid": P(front, None),
+        "t": P(),
+    }
+
+
+def init_wire_inbox_ring(packed: PackedParams, staleness: int, dp: int,
+                         wire: WireFormat) -> Dict:
+    """Bootstrap of the staleness-k inbox ring for a COMPRESSED wire: every
+    slot is a tuple-over-buckets of all-zero wire payloads (codes + scales
+    for int8/fp8; a zero bucket for fp32/bf16) instead of a params copy —
+    zero payloads decode to exact zeros and the all-invalid mask means the
+    first k arrival mixes consume them only at alpha = 0. Works on global
+    (dp, n) buckets (trainer init / simulator) alike."""
+    if staleness < 1:
+        raise ValueError(f"inbox ring needs staleness >= 1, got {staleness}")
+    slot = tuple(zero_payload_like(b, wire.dtype) for b in packed.buckets)
+    return {
+        "slots": tuple(jax.tree.map(jnp.copy, slot)
+                       for _ in range(int(staleness))),
+        "valid": jnp.zeros((max(dp, 1), int(staleness)), jnp.float32),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def wire_inbox_ring_specs(packed_specs: PackedParams, dp_axes: Sequence[str],
+                          staleness: int, wire: WireFormat) -> Dict:
+    """PartitionSpec tree matching ``init_wire_inbox_ring``: each slot is a
+    tuple of per-bucket payload specs — quantized payload codes AND scales
+    are flat with the bucket's sharding (strides are LANE multiples, so the
+    scale dim divides evenly across shard-local layouts)."""
+    dp_axes = tuple(dp_axes)
+    front = (dp_axes if len(dp_axes) > 1 else dp_axes[0]) if dp_axes else None
+    slot = tuple(payload_spec(s, wire.dtype) for s in packed_specs.buckets)
+    return {
+        "slots": tuple(slot for _ in range(int(staleness))),
         "valid": P(front, None),
         "t": P(),
     }
@@ -269,6 +309,7 @@ def make_packed_async_gossip_mix(
     drop_seed: int = 0,
     mode: str = "static",
     mix_impl: Callable | None = None,
+    wire: WireFormat | None = None,
 ) -> Callable[[PyTree, Dict, Any], Tuple[PyTree, Dict]]:
     """Bounded-delay async mix over persistent gossip buckets.
 
@@ -279,13 +320,102 @@ def make_packed_async_gossip_mix(
     replica) are legal exactly as in the sync packed engine — the bucket
     flat dim shards over the in-replica axes and the ppermute runs over the
     replica axes only (``check_layout_mesh`` validates the agreement).
+
+    ``wire`` (non-default): the compressed + partition-sampled wire. Ring
+    slots then hold tuple-over-buckets WIRE PAYLOADS (``init_wire_inbox_ring``
+    / ``wire_inbox_ring_specs``): the mixed bucket is encoded on dispatch
+    (stochastic rounding keyed on the ring's absolute dispatch counter ``t``
+    — matching the simulator oracle bit-for-bit and resumable across
+    checkpoints) and the consumed payload decodes inside the arrival-mix
+    sweep; buckets outside the rotating subset ship an all-zero payload and
+    are consumed at alpha = 0 (statically passed through untouched). The
+    consumption mask at phase ``ph`` is ``selected(ph - k)`` — the slot
+    consumed now was dispatched k steps ago.
     """
     check_layout_mesh(layout, mesh)
-    specs = packed_param_specs(layout, tuple(axis_names))
-    return make_async_gossip_mix(mesh, axis_names, schedule, specs,
-                                 alpha=alpha, staleness=staleness,
-                                 drop_rate=drop_rate, drop_seed=drop_seed,
-                                 mode=mode, mix_impl=mix_impl)
+    axis_names = tuple(axis_names)
+    specs = packed_param_specs(layout, axis_names)
+    if wire is None or wire.is_default:
+        return make_async_gossip_mix(mesh, axis_names, schedule, specs,
+                                     alpha=alpha, staleness=staleness,
+                                     drop_rate=drop_rate, drop_seed=drop_seed,
+                                     mode=mode, mix_impl=mix_impl)
+    dp = int(np.prod([mesh.shape[a] for a in axis_names]))
+    if schedule.p != dp:
+        raise ValueError(
+            f"schedule built for p={schedule.p} but mesh axes {axis_names} "
+            f"give dp={dp}")
+    if staleness < 1:
+        raise ValueError(f"gossip_async needs staleness >= 1, got {staleness}")
+    k = int(staleness)
+    subset = wire_subset_of(wire, layout.num_buckets)
+    eff = wire_period(schedule, subset)
+    all_pairs = [linear_pairs(schedule, t) for t in range(schedule.period)]
+    ring_specs = wire_inbox_ring_specs(specs, axis_names, k, wire)
+
+    def local_async_wire(phase_idx: int, params: PackedParams, ring: Dict):
+        pairs = all_pairs[phase_idx % schedule.period]
+        nb = layout.num_buckets
+        sel_cons = (subset.selected(phase_idx - k) if subset is not None
+                    else np.ones(nb, bool))
+        sel_send = (subset.selected(phase_idx) if subset is not None
+                    else np.ones(nb, bool))
+        slots, valid, t = ring["slots"], ring["valid"], ring["t"]
+        # each device owns exactly one replica row under the packed-engine
+        # sharding restriction, so the masked alpha is one traced scalar
+        a_eff = alpha * valid[0, 0]
+        mixed_buckets = []
+        for i, x in enumerate(params.buckets):
+            if sel_cons[i]:
+                mixed_buckets.append(
+                    _wire_mix_one(x, slots[0][i], a_eff, mix_impl))
+            else:
+                mixed_buckets.append(x)  # unsent on dispatch: exact skip
+        mixed = PackedParams(mixed_buckets, layout)
+        rank = _linear_rank(mesh, axis_names)
+        payload = []
+        for i, m in enumerate(mixed.buckets):
+            if sel_send[i]:
+                enc = _encode_bucket(layout, mesh, wire, m, t, rank, i)
+                payload.append(jax.tree.map(
+                    lambda e: jax.lax.ppermute(e, axis_names, pairs), enc))
+            else:
+                payload.append(zero_payload_like(m, wire.dtype))
+        ok = exchange_ok(t, rank, drop_seed, drop_rate)
+        return mixed, _ring_advance(slots, valid, t, tuple(payload), ok)
+
+    in_specs = (specs, ring_specs)
+    out_specs = (specs, ring_specs)
+
+    if mode == "static":
+        mixers = [
+            jax.shard_map(functools.partial(local_async_wire, ph), mesh=mesh,
+                          in_specs=in_specs, out_specs=out_specs,
+                          check_vma=False)
+            for ph in range(eff)
+        ]
+
+        def mix(params, ring, phase):
+            return mixers[int(phase) % eff](params, ring)
+
+        return mix
+
+    if mode == "dynamic":
+        def body(params, ring, phase):
+            branches = [functools.partial(local_async_wire, ph)
+                        for ph in range(eff)]
+            return jax.lax.switch(phase % eff, branches, params, ring)
+
+        inner = jax.shard_map(
+            body, mesh=mesh, in_specs=in_specs + (P(),), out_specs=out_specs,
+            check_vma=False)
+
+        def mix(params, ring, phase):
+            return inner(params, ring, jnp.asarray(phase, jnp.int32))
+
+        return mix
+
+    raise ValueError(f"unknown gossip mode {mode!r}")
 
 
 # ------------------------------------------------------------ fused engine
@@ -303,6 +433,7 @@ def make_packed_fused_async_update(
     drop_seed: int = 0,
     mode: str = "static",
     impl: str | None = None,
+    wire: WireFormat | None = None,
 ) -> Callable:
     """Fused mix+apply engine for the staleness-k inbox ring: build
     ``update(params, grads, ring, opt_state, phase) -> (params',
@@ -326,6 +457,15 @@ def make_packed_fused_async_update(
     the diffusion argument carry over.  Fresh runs bootstrap with an
     all-invalid ring (``init_inbox_ring``), making the first k arrival
     mixes identity.
+
+    ``wire`` (non-default): ring slots hold tuple-over-buckets wire
+    payloads (``init_wire_inbox_ring``), the outbox encodes the RAW
+    pre-update buckets (noise keyed on the ring's dispatch counter ``t``),
+    and the consumed payload's codes + scales feed the fused kernel's
+    partner/scale streams — the decode still rides the single sweep.
+    Partition-sampled buckets outside the dispatch subset ship zero
+    payloads; outside the consumption subset (``selected(phase - k)``)
+    the kernel runs the pure local update (partner = None, alpha = 0).
     """
     axis_names = tuple(axis_names)
     dp = int(np.prod([mesh.shape[a] for a in axis_names]))
@@ -338,10 +478,45 @@ def make_packed_fused_async_update(
     k = int(staleness)
     check_layout_mesh(layout, mesh)
     specs = packed_param_specs(layout, axis_names)
-    ring_specs = inbox_ring_specs(specs, axis_names, k)
+    wired = wire is not None and not wire.is_default
+    subset = wire_subset_of(wire, layout.num_buckets) if wired else None
+    eff = wire_period(schedule, subset) if wired else schedule.period
+    ring_specs = (wire_inbox_ring_specs(specs, axis_names, k, wire)
+                  if wired else inbox_ring_specs(specs, axis_names, k))
     local = packed_fused_local_update(layout, optimizer, alpha=alpha,
                                       impl=impl)
     all_pairs = [linear_pairs(schedule, t) for t in range(schedule.period)]
+
+    def local_async_wire(phase_idx, params, grads, ring, opt_state):
+        pairs = all_pairs[phase_idx % schedule.period]
+        nb = layout.num_buckets
+        sel_cons = (subset.selected(phase_idx - k) if subset is not None
+                    else np.ones(nb, bool))
+        sel_send = (subset.selected(phase_idx) if subset is not None
+                    else np.ones(nb, bool))
+        slots, valid, t = ring["slots"], ring["valid"], ring["t"]
+        rank = _linear_rank(mesh, axis_names)
+        # dispatch first: the outbox encodes the RAW incoming params and is
+        # consumed only as returned ring state — the wire overlaps the whole
+        # fwd/bwd plus the next staleness-1 steps entirely
+        outbox = []
+        for i, b in enumerate(params.buckets):
+            if sel_send[i]:
+                enc = _encode_bucket(layout, mesh, wire, b, t, rank, i)
+                outbox.append(jax.tree.map(
+                    lambda e: jax.lax.ppermute(e, axis_names, pairs), enc))
+            else:
+                outbox.append(zero_payload_like(b, wire.dtype))
+        # each device owns exactly one replica row under the packed-engine
+        # sharding restriction, so the masked alpha is one traced scalar
+        a_eff = alpha * valid[0, 0]
+        partners = [slots[0][i] if sel_cons[i] else None for i in range(nb)]
+        alphas = [a_eff if sel_cons[i] else 0.0 for i in range(nb)]
+        new_params, new_state = local(params, grads, opt_state, partners,
+                                      alpha_eff=alphas)
+        ok = exchange_ok(t, rank, drop_seed, drop_rate)
+        return new_params, new_state, _ring_advance(slots, valid, t,
+                                                    tuple(outbox), ok)
 
     def local_async(pairs, params, grads, ring, opt_state):
         # dispatch first: the outbox depends only on the incoming params
@@ -367,10 +542,14 @@ def make_packed_fused_async_update(
 
     if mode == "static":
         def update(params, grads, ring, opt_state, phase):
-            pairs = all_pairs[int(phase) % schedule.period]
             opt_specs = opt_specs_of(opt_state)
+            if wired:
+                body = functools.partial(local_async_wire, int(phase) % eff)
+            else:
+                body = functools.partial(
+                    local_async, all_pairs[int(phase) % schedule.period])
             fn = jax.shard_map(
-                functools.partial(local_async, pairs), mesh=mesh,
+                body, mesh=mesh,
                 in_specs=(specs, specs, ring_specs, opt_specs),
                 out_specs=(specs, opt_specs, ring_specs), check_vma=False)
             return fn(params, grads, ring, opt_state)
@@ -382,9 +561,13 @@ def make_packed_fused_async_update(
             opt_specs = opt_specs_of(opt_state)
 
             def body(params, grads, ring, opt_state, ph):
-                branches = [functools.partial(local_async, pairs)
-                            for pairs in all_pairs]
-                return jax.lax.switch(ph % schedule.period, branches,
+                if wired:
+                    branches = [functools.partial(local_async_wire, i)
+                                for i in range(eff)]
+                else:
+                    branches = [functools.partial(local_async, pairs)
+                                for pairs in all_pairs]
+                return jax.lax.switch(ph % eff, branches,
                                       params, grads, ring, opt_state)
 
             inner = jax.shard_map(

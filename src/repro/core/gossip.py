@@ -48,6 +48,7 @@ Two phase-selection modes:
 from __future__ import annotations
 
 import functools
+import math
 from typing import Any, Callable, Sequence, Tuple
 
 import jax
@@ -55,9 +56,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.kernels.quantize import (WireFormat, decode_wire, encode_wire,
+                                    wire_itemsize, wire_key)
+
 from .buckets import (BucketLayout, PackedParams, check_layout_mesh,
                       packed_param_specs)
-from .topology import GossipSchedule
+from .topology import (BucketSubsetSchedule, GossipSchedule,
+                       build_subset_schedule)
 
 PyTree = Any
 
@@ -67,7 +72,74 @@ __all__ = [
     "make_packed_gossip_mix",
     "make_packed_fused_update",
     "gossip_bytes_per_step",
+    "wire_period",
+    "wire_subset_of",
+    "wire_bytes_per_step",
 ]
+
+
+# ----------------------------------------------------- compressed-wire plumbing
+
+def wire_subset_of(wire: WireFormat | None,
+                   num_buckets: int) -> BucketSubsetSchedule | None:
+    """The rotating bucket-subset schedule implied by a wire format (None
+    for full participation — including ``wire=None``, the PR-1..5 path)."""
+    if wire is None:
+        return None
+    return build_subset_schedule(num_buckets, wire.subset)
+
+
+def wire_period(schedule: GossipSchedule | None,
+                subset: BucketSubsetSchedule | None) -> int:
+    """Effective phase period of a (partner schedule, bucket subset) pair:
+    lcm of the two rotations — the protocol's ``period`` (the Trainer mods
+    the step by it BEFORE the engines see a phase, so the subset rotation
+    must divide it)."""
+    per = schedule.period if schedule is not None else 1
+    if subset is None:
+        return per
+    return per * subset.period // math.gcd(per, subset.period)
+
+
+def _axis_rank(mesh: Mesh, axis_names: Tuple[str, ...]):
+    """This device's position in the row-major linearization of
+    ``axis_names`` (traced; must run inside shard_map)."""
+    idx = jnp.zeros((), jnp.int32)
+    for a in axis_names:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    return idx
+
+
+def _wire_base_index(layout: BucketLayout, mesh: Mesh, bucket_index: int):
+    """GLOBAL element offset of this device's shard of bucket
+    ``bucket_index`` — keys the stochastic-rounding noise by global element
+    position, so shard-local (fsdp) engines and the full-bucket simulator
+    oracle draw identical noise (kernels.quantize discipline)."""
+    if getattr(layout, "num_shards", 1) <= 1:
+        return 0
+    srank = _axis_rank(mesh, tuple(layout.shard_axes))
+    return srank * layout.strides[bucket_index]
+
+
+def _encode_bucket(layout: BucketLayout, mesh: Mesh, wire: WireFormat,
+                   bucket: jnp.ndarray, t, rank, bucket_index: int):
+    """Dispatch-side wire encode of one local bucket shard (plain jnp —
+    shared verbatim with the simulator oracle, hence bit-exact)."""
+    keys = wire_key(t, rank, bucket_index, wire.seed)
+    return encode_wire(bucket, wire.dtype, keys=keys,
+                       base_index=_wire_base_index(layout, mesh, bucket_index))
+
+
+def _wire_mix_one(x: jnp.ndarray, payload, alpha, mix_impl: Callable | None):
+    """Arrival mix of one bucket against its wire payload. ``mix_impl``
+    (kernels.gossip_mix_wire_bucket on the packed path) folds the quantized
+    decode into the kernel sweep; the jnp fallback runs the identical fp32
+    op order (decode, then (1-a)*x + a*b, cast back)."""
+    if mix_impl is not None:
+        return mix_impl(x, payload, alpha)
+    b = decode_wire(payload)
+    return (x.astype(jnp.float32) * (1.0 - alpha)
+            + b.astype(jnp.float32) * alpha).astype(x.dtype)
 
 
 def linear_pairs(schedule: GossipSchedule, step: int) -> Tuple[Tuple[int, int], ...]:
@@ -163,6 +235,7 @@ def make_packed_gossip_mix(
     alpha: float = 0.5,
     mode: str = "static",
     mix_impl: Callable | None = None,
+    wire: WireFormat | None = None,
 ) -> Callable[[PyTree, Any], PyTree]:
     """Build ``mix(packed, phase) -> packed`` over persistent gossip buckets.
 
@@ -180,11 +253,76 @@ def make_packed_gossip_mix(
     runs over the replica axes only. ``check_layout_mesh`` validates the
     layout/mesh agreement (the shard-aware successor of the old "only
     sharded on the replica axis" guard).
+
+    ``wire`` (non-default): the compressed + partition-sampled wire. Each
+    SELECTED bucket (rotating subset, ``core.topology.build_subset_schedule``)
+    is encoded on the dispatch side (int8 stochastic / fp8 / bf16 — see
+    kernels.quantize), the codes+scales are ppermuted, and the decode folds
+    into the arrival-mix sweep; UNSENT buckets issue no collective and pass
+    through untouched (bit-exact skip). Phase arithmetic runs modulo
+    ``wire_period(schedule, subset)``; the sync wire keys its
+    stochastic-rounding noise on that phase, so noise is periodic in the
+    effective period (documented contract — the async engines key on the
+    absolute dispatch counter instead).
     """
     check_layout_mesh(layout, mesh)
-    specs = packed_param_specs(layout, tuple(axis_names))
-    return make_gossip_mix(mesh, axis_names, schedule, specs, alpha=alpha,
-                           mode=mode, mix_impl=mix_impl)
+    axis_names = tuple(axis_names)
+    specs = packed_param_specs(layout, axis_names)
+    if wire is None or wire.is_default:
+        return make_gossip_mix(mesh, axis_names, schedule, specs, alpha=alpha,
+                               mode=mode, mix_impl=mix_impl)
+    dp = int(np.prod([mesh.shape[a] for a in axis_names]))
+    if schedule.p != dp:
+        raise ValueError(
+            f"schedule built for p={schedule.p} but mesh axes {axis_names} "
+            f"give dp={dp}")
+    subset = wire_subset_of(wire, layout.num_buckets)
+    eff = wire_period(schedule, subset)
+    all_pairs = [linear_pairs(schedule, t) for t in range(schedule.period)]
+
+    def local_mix(phase_idx: int, params: PackedParams) -> PackedParams:
+        pairs = all_pairs[phase_idx % schedule.period]
+        sel = (subset.selected(phase_idx) if subset is not None
+               else np.ones(layout.num_buckets, bool))
+        rank = _axis_rank(mesh, axis_names)
+        new = []
+        for i, x in enumerate(params.buckets):
+            if not sel[i]:
+                new.append(x)  # unsent: no collective, untouched bits
+                continue
+            enc = _encode_bucket(layout, mesh, wire, x, phase_idx, rank, i)
+            recv = jax.tree.map(
+                lambda e: jax.lax.ppermute(e, axis_names, pairs), enc)
+            new.append(_wire_mix_one(x, recv, alpha, mix_impl))
+        return PackedParams(new, layout)
+
+    if mode == "static":
+        mixers = [
+            jax.shard_map(functools.partial(local_mix, ph), mesh=mesh,
+                          in_specs=(specs,), out_specs=specs, check_vma=False)
+            for ph in range(eff)
+        ]
+
+        def mix(params, phase):
+            return mixers[int(phase) % eff](params)
+
+        return mix
+
+    if mode == "dynamic":
+        def body(params, phase):
+            branches = [functools.partial(local_mix, ph) for ph in range(eff)]
+            return jax.lax.switch(phase % eff, branches, params)
+
+        inner = jax.shard_map(
+            body, mesh=mesh, in_specs=(specs, P()), out_specs=specs,
+            check_vma=False)
+
+        def mix(params, phase):
+            return inner(params, jnp.asarray(phase, jnp.int32))
+
+        return mix
+
+    raise ValueError(f"unknown gossip mode {mode!r}")
 
 
 # --------------------------------------------------------------------------
@@ -199,13 +337,17 @@ def packed_fused_local_update(layout: BucketLayout, optimizer, *,
 
     ``partner`` is the mix operand (the landed ppermute result — sync recv
     or async ring slot), or None for the pure local update (alpha treated as
-    0).  ``alpha_eff`` overrides the closure alpha per call — the
-    bounded-delay engine passes the masked alpha (the static alpha scaled by
-    the consumed slot's validity) as a traced scalar, which the kernels
-    consume through their masked-alpha coefficient path.  One
-    ``optimizer.fused_update`` call — a single read+write sweep — per
-    bucket; the step counter advances exactly like the tree-level update.
-    Shared by the sync engine below and the async engine in async_gossip.py.
+    0).  It may also be a LIST of per-bucket operands (array, quantized
+    ``{"q","s"}`` wire payload, or None for an unsent bucket — the
+    partition-sampled wire), in which case ``alpha_eff`` may be a matching
+    list of per-bucket alphas (0.0 for unsent buckets).  ``alpha_eff``
+    overrides the closure alpha per call — the bounded-delay engine passes
+    the masked alpha (the static alpha scaled by the consumed slot's
+    validity) as a traced scalar, which the kernels consume through their
+    masked-alpha coefficient path.  One ``optimizer.fused_update`` call — a
+    single read+write sweep — per bucket; the step counter advances exactly
+    like the tree-level update.  Shared by the sync engine below and the
+    async engine in async_gossip.py.
     """
     if optimizer.fused_update is None:
         raise ValueError(
@@ -214,6 +356,7 @@ def packed_fused_local_update(layout: BucketLayout, optimizer, *,
     moment_keys = tuple(optimizer.fused_moments)
 
     def body(params, grads, opt_state, partner, alpha_eff=None):
+        per_bucket = isinstance(partner, (list, tuple))
         if alpha_eff is None:
             alpha_eff = alpha if partner is not None else 0.0
         step = opt_state["step"]
@@ -223,10 +366,17 @@ def packed_fused_local_update(layout: BucketLayout, optimizer, *,
             moms = tuple(
                 opt_state[k].buckets[i] if opt_state[k] is not None else None
                 for k in moment_keys)
-            mix_operand = partner.buckets[i] if partner is not None else None
+            if per_bucket:
+                mix_operand = partner[i]
+                a_i = (alpha_eff[i]
+                       if isinstance(alpha_eff, (list, tuple)) else alpha_eff)
+            else:
+                mix_operand = (partner.buckets[i]
+                               if partner is not None else None)
+                a_i = alpha_eff
             p2, m2 = optimizer.fused_update(
                 i, params.buckets[i], grads.buckets[i], mix_operand, moms,
-                step=step, alpha=alpha_eff, layout=layout, impl=impl)
+                step=step, alpha=a_i, layout=layout, impl=impl)
             new_buckets.append(p2)
             for j, mv in enumerate(m2):
                 new_moms[j].append(mv)
@@ -257,6 +407,7 @@ def make_packed_fused_update(
     alpha: float = 0.5,
     mode: str = "static",
     impl: str | None = None,
+    wire: WireFormat | None = None,
 ) -> Callable:
     """Build ``update(params, grads, opt_state, phase) -> (params',
     opt_state')`` — the synchronous fused mix+apply engine.
@@ -274,6 +425,14 @@ def make_packed_fused_update(
     With ``schedule=None`` (dp == 1, or non-gossip protocols): no collective
     is issued and the same kernel runs with alpha = 0 — one compiled step
     body shape for every phase of every protocol.
+
+    ``wire`` (non-default): the compressed + partition-sampled wire — each
+    SELECTED bucket's raw pre-update params are encoded on dispatch
+    (kernels.quantize), the codes+scales ppermuted, and the decode folds
+    into the fused kernel sweep (the scale column stream); UNSENT buckets
+    issue no collective and take the pure local update (per-bucket
+    alpha = 0 through the masked-alpha path). Phases run modulo
+    ``wire_period(schedule, subset)``.
     """
     axis_names = tuple(axis_names)
     check_layout_mesh(layout, mesh)
@@ -305,6 +464,9 @@ def make_packed_fused_update(
             f"schedule built for p={schedule.p} but mesh axes {axis_names} "
             f"give dp={dp}")
     all_pairs = [linear_pairs(schedule, t) for t in range(schedule.period)]
+    wired = wire is not None and not wire.is_default
+    subset = wire_subset_of(wire, layout.num_buckets) if wired else None
+    eff = wire_period(schedule, subset)
 
     def local_sync(pairs, params, grads, opt_state):
         # dispatch first: the recv depends only on the incoming params, so
@@ -315,7 +477,33 @@ def make_packed_fused_update(
             layout)
         return local(params, grads, opt_state, recv)
 
+    def local_sync_wire(phase_idx, params, grads, opt_state):
+        pairs = all_pairs[phase_idx % schedule.period]
+        sel = (subset.selected(phase_idx) if subset is not None
+               else np.ones(layout.num_buckets, bool))
+        rank = _axis_rank(mesh, axis_names)
+        partners, alphas = [], []
+        for i, b in enumerate(params.buckets):
+            if not sel[i]:
+                partners.append(None)
+                alphas.append(0.0)
+                continue
+            enc = _encode_bucket(layout, mesh, wire, b, phase_idx, rank, i)
+            partners.append(jax.tree.map(
+                lambda e: jax.lax.ppermute(e, axis_names, pairs), enc))
+            alphas.append(alpha)
+        return local(params, grads, opt_state, partners, alpha_eff=alphas)
+
     if mode == "static":
+        if wired:
+            def update(params, grads, opt_state, phase):
+                fn = shmapped(
+                    functools.partial(local_sync_wire, int(phase) % eff),
+                    opt_specs_of(opt_state))
+                return fn(params, grads, opt_state)
+
+            return update
+
         def update(params, grads, opt_state, phase):
             pairs = all_pairs[int(phase) % schedule.period]
             fn = shmapped(functools.partial(local_sync, pairs),
@@ -329,6 +517,11 @@ def make_packed_fused_update(
             opt_specs = opt_specs_of(opt_state)
 
             def body(params, grads, opt_state, ph):
+                if wired:
+                    branches = [functools.partial(local_sync_wire, p_)
+                                for p_ in range(eff)]
+                    return jax.lax.switch(ph % eff, branches,
+                                          params, grads, opt_state)
                 branches = [functools.partial(local_sync, pairs)
                             for pairs in all_pairs]
                 return jax.lax.switch(ph % schedule.period, branches,
@@ -362,4 +555,40 @@ def gossip_bytes_per_step(replica_bytes: int, dp: int, model_shards: int = 1) ->
         "allreduce_bytes_per_chip": 2.0 * shard * (dp - 1) / dp if dp > 1 else 0.0,
         "allreduce_latency_steps": int(np.ceil(np.log2(max(dp, 2)))),
         "gossip_latency_steps": 1,
+    }
+
+
+def wire_bytes_per_step(layout: BucketLayout, wire: WireFormat | None = None
+                        ) -> dict:
+    """Exact per-chip wire bytes of ONE packed gossip exchange under a wire
+    format (the compressed-wire headline accounting).
+
+    ``code_bytes`` counts the ppermuted payload codes only; per-tile fp32
+    scales are reported separately (``scale_bytes``) — they ride the
+    coefficient block like the per-bucket scalars the fused kernels already
+    ship, so the headline compression ratio is exact (int8 = 4x, int8 +
+    50% sampling = 8x vs an fp32 bucket wire). ``subset_avg`` averages the
+    rotating bucket subset over one full rotation period (every bucket is
+    sent ``n_send``-out-of-``num_buckets`` of the time)."""
+    wire = wire or WireFormat()
+    subset = wire_subset_of(wire, layout.num_buckets)
+    # per-chip: each device ppermutes its own (1, stride) block per bucket
+    sizes = [int(s) for s in layout.strides]
+    raw, code, scale = 0.0, 0.0, 0.0
+    frac = 1.0 if subset is None else subset.fraction
+    for i, n in enumerate(sizes):
+        dt = layout.bucket_dtypes[i]
+        raw += n * int(np.dtype(dt).itemsize)
+        code += n * wire_itemsize(wire.dtype, dt) * frac
+        if wire.quantized:
+            scale += (n // 128) * 4 * frac
+    return {
+        "raw_bytes": raw,
+        "code_bytes": code,
+        "scale_bytes": scale,
+        "total_bytes": code + scale,
+        "reduction_codes": raw / code if code else float("inf"),
+        "reduction_total": raw / (code + scale) if code + scale else float("inf"),
+        "subset_fraction": frac,
+        "wire_dtype": wire.dtype,
     }

@@ -41,9 +41,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.kernels.quantize import WireFormat
+
 from .async_gossip import make_async_gossip_mix, make_packed_async_gossip_mix
 from .buckets import BucketLayout
-from .gossip import make_gossip_mix, make_packed_gossip_mix
+from .gossip import (make_gossip_mix, make_packed_gossip_mix, wire_period,
+                     wire_subset_of)
 from .topology import GossipSchedule, build_schedule
 
 PyTree = Any
@@ -73,9 +76,20 @@ class Protocol:
     # implied by whether an inbox exists). Sizes the ring in the train state
     # and the trainer's in-flight dispatch window (2 + 2 * staleness).
     staleness: int = 0
+    # Wire format of the gossip payload (compressed + partition-sampled
+    # wire). None / default == the uncompressed full-participation PR-1..5
+    # wire. Non-default wires need the packed engines.
+    wire: Optional[WireFormat] = None
+    # Effective phase period: lcm(schedule.period, subset rotation period)
+    # when partition sampling is on — the trainer mods the step index by
+    # THIS before the engines see the phase, so it must already account
+    # for the bucket-subset rotation. 0 == just the schedule period.
+    _period: int = 0
 
     @property
     def period(self) -> int:
+        if self._period:
+            return self._period
         return self.schedule.period if self.schedule is not None else 1
 
     @property
@@ -134,6 +148,9 @@ def make_protocol(
     mix_impl: Callable | None = None,
     packed_layout: BucketLayout | None = None,
     seed: int = 0,
+    wire_dtype: str = "fp32",
+    gossip_subset: float = 1.0,
+    wire_seed: int = 0,
 ) -> Protocol:
     """Build a Protocol for ``mesh`` with replicas over ``data_axes``.
 
@@ -148,6 +165,16 @@ def make_protocol(
     injects emulated-wire timeout drops (skip-on-timeout) through the
     deterministic ``core.async_gossip.exchange_ok`` hash seeded by
     ``drop_seed``; both are ignored by the synchronous protocols.
+
+    ``wire_dtype`` / ``gossip_subset`` / ``wire_seed`` configure the
+    compressed + partition-sampled wire (kernels.quantize.WireFormat) for
+    the gossip protocols: payloads are encoded on dispatch (stochastic
+    rounding seeded by ``wire_seed``, independent of ``drop_seed``) and
+    only a rotating subset of buckets ships per exchange.  A non-default
+    wire requires the PACKED engines (``packed_layout``) — the per-leaf
+    path has no lane-aligned buckets to quantize over.  ``Protocol.period``
+    then reports lcm(schedule period, subset rotation period), which the
+    trainer must use to fold the step index.
     """
     if name not in PROTOCOLS:
         raise ValueError(f"unknown protocol {name!r}; options {PROTOCOLS}")
@@ -156,8 +183,18 @@ def make_protocol(
                          f"got {staleness}")
     data_axes = tuple(data_axes)
     dp = int(np.prod([mesh.shape[a] for a in data_axes])) if data_axes else 1
+    wire = WireFormat(dtype=wire_dtype, subset=gossip_subset, seed=wire_seed)
+    wired = not wire.is_default
+    if wired and dp > 1 and name in ("gossip", "gossip_async") \
+            and packed_layout is None:
+        raise ValueError(
+            "the compressed/partition-sampled wire (wire_dtype="
+            f"{wire_dtype!r}, gossip_subset={gossip_subset}) needs the "
+            "packed gossip engines — pass packed_layout (mode='packed' / "
+            "'fsdp' in the trainer)")
     schedule = None
     mix = None
+    eff_period = 0
     if dp > 1 and name in ("gossip", "gossip_async", "every_logp"):
         schedule = build_schedule(dp, topology=topology,
                                   num_rotations=num_rotations, seed=seed)
@@ -165,7 +202,8 @@ def make_protocol(
         if packed_layout is not None:
             mix = make_packed_gossip_mix(mesh, data_axes, schedule,
                                          packed_layout, alpha=alpha,
-                                         mode=mode, mix_impl=mix_impl)
+                                         mode=mode, mix_impl=mix_impl,
+                                         wire=wire if wired else None)
         else:
             mix = make_gossip_mix(mesh, data_axes, schedule, param_specs,
                                   alpha=alpha, mode=mode, mix_impl=mix_impl)
@@ -174,13 +212,21 @@ def make_protocol(
             mix = make_packed_async_gossip_mix(
                 mesh, data_axes, schedule, packed_layout, alpha=alpha,
                 staleness=staleness, drop_rate=drop_rate,
-                drop_seed=drop_seed, mode=mode, mix_impl=mix_impl)
+                drop_seed=drop_seed, mode=mode, mix_impl=mix_impl,
+                wire=wire if wired else None)
         else:
             mix = make_async_gossip_mix(
                 mesh, data_axes, schedule, param_specs, alpha=alpha,
                 staleness=staleness, drop_rate=drop_rate,
                 drop_seed=drop_seed, mode=mode, mix_impl=mix_impl)
+    if wired and dp > 1 and name in ("gossip", "gossip_async"):
+        eff_period = wire_period(
+            schedule, wire_subset_of(wire, packed_layout.num_buckets))
     return Protocol(name=name, dp=dp, schedule=schedule, _mix=mix,
                     dynamic=(mode == "dynamic"),
                     staleness=(int(staleness)
-                               if (name == "gossip_async" and dp > 1) else 0))
+                               if (name == "gossip_async" and dp > 1) else 0),
+                    wire=(wire if (wired and dp > 1
+                                   and name in ("gossip", "gossip_async"))
+                          else None),
+                    _period=eff_period)

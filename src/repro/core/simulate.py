@@ -25,7 +25,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .topology import GossipSchedule
+from repro.kernels.quantize import (LANE, WireFormat, decode_wire,
+                                    encode_wire, wire_key)
+
+from .topology import GossipSchedule, build_subset_schedule
 
 PyTree = Any
 
@@ -34,6 +37,8 @@ __all__ = [
     "gossip_mix_sim",
     "gossip_mix_sim_delayed",
     "gossip_mix_sim_delayed_k",
+    "gossip_mix_sim_quantized",
+    "gossip_mix_sim_quantized_k",
     "allreduce_mean_sim",
     "replica_variance",
     "make_sim_train_step",
@@ -121,6 +126,118 @@ def gossip_mix_sim_delayed_k(params: PyTree, ring: Any,
         "t": t + 1,
     }
     return mixed, new_ring
+
+
+def gossip_mix_sim_quantized(buckets, recv_from: jnp.ndarray, t, *,
+                             wire: WireFormat, alpha: float = 0.5):
+    """Quantized-wire oracle for the SYNCHRONOUS packed engines — the
+    reference semantics of ``core.gossip.make_packed_gossip_mix(wire=...)``
+    (and, composed with the optimizer algebra, the fused twin).
+
+    ``buckets`` is the global view: a list of ``(p, n)`` arrays, one per
+    layout bucket, each row one replica's flat LANE-multiple bucket.  One
+    exchange at dispatch step ``t``, schedule row ``recv_from``:
+
+        enc_j     = encode_wire(x_j, keyed on (t, rank=j, bucket, seed))
+        payload_j = enc_{recv_from[j]}              (codes AND scales move)
+        mixed_j   = (1-alpha) * x_j + alpha * dequant(payload_j)
+
+    with the decode FOLDED into the mix expression — one traced computation,
+    exactly what the in-kernel (column-stream scale) decode contracts to —
+    and buckets outside the rotating subset at step ``t`` passed through
+    untouched.  Shard-local (fsdp) layouts agree bit-for-bit because the
+    engine keys noise by the GLOBAL element index (``base_index``) and
+    128-tiles never straddle shard boundaries (strides are LANE multiples).
+
+    ``t`` may be a static Python int (subset skip resolved statically, like
+    the engine) or a traced scalar (subset applied by ``jnp.where`` — the
+    same bits either way).
+    """
+    subset = build_subset_schedule(len(buckets), wire.subset)
+    p = int(buckets[0].shape[0])
+    ranks = jnp.arange(p)
+    static_t = isinstance(t, (int, np.integer))
+    sel = subset.selected(int(t)) if (static_t and subset is not None) \
+        else None
+    mask = subset.mask(t) if (not static_t and subset is not None) else None
+    out = []
+    for i, x in enumerate(buckets):
+        if sel is not None and not sel[i]:
+            out.append(x)
+            continue
+        keys = wire_key(t, ranks, i, wire.seed)
+        enc = encode_wire(x, wire.dtype, keys=keys)
+        payload = jax.tree.map(lambda e: e[recv_from], enc)
+        b = decode_wire(payload)
+        mixed = (x.astype(jnp.float32) * (1.0 - alpha)
+                 + b.astype(jnp.float32) * alpha).astype(x.dtype)
+        if mask is not None:
+            mixed = jnp.where(mask[i], mixed, x)
+        out.append(mixed)
+    return out
+
+
+def gossip_mix_sim_quantized_k(buckets, ring: Any, recv_from: jnp.ndarray, *,
+                               wire: WireFormat, alpha: float = 0.5,
+                               ok: jnp.ndarray = None):
+    """Quantized-wire oracle for the staleness-k ASYNC ring — the reference
+    semantics of ``core.async_gossip.make_packed_async_gossip_mix(wire=...)``.
+
+    ``ring`` is an ``init_wire_inbox_ring`` structure over GLOBAL buckets:
+    each slot a tuple of per-bucket wire payloads (codes ``(p, n)`` +
+    scales ``(p, n//128)`` when quantized), oldest first.  One step:
+
+        a_eff_j = alpha * valid[j, 0]
+        mixed_j = (1-a_eff_j) * x_j + a_eff_j * dequant(slots[0]_j)
+                    for buckets in the CONSUMPTION subset selected(t - k)
+                    (the consumed slot was dispatched k steps ago);
+                  x_j untouched otherwise
+        dispatch: encode the mixed bucket (keys on the ring counter ``t``),
+                  gather by ``recv_from``; buckets outside selected(t)
+                  append an all-zero payload
+        ring'   = FIFO advance with landed-flag ``ok``
+
+    The decode is folded into the mix expression (the in-sweep kernel
+    contract) and the subset masks use the floor-mod ``mask(t)`` twin, so
+    the first k bootstrap steps (negative ``t - k``) agree with the
+    engines' static ``selected(phase - k)`` selection.
+    """
+    subset = build_subset_schedule(len(buckets), wire.subset)
+    slots, valid, t = ring["slots"], ring["valid"], ring["t"]
+    k = len(slots)
+    p = int(buckets[0].shape[0])
+    ranks = jnp.arange(p)
+    a = alpha * valid[:, 0]
+    sel_cons = subset.mask(t - k) if subset is not None else None
+    sel_send = subset.mask(t) if subset is not None else None
+    mixed_buckets = []
+    for i, x in enumerate(buckets):
+        b = decode_wire(slots[0][i])
+        w = a.reshape((p,) + (1,) * (x.ndim - 1))
+        mix = (x.astype(jnp.float32) * (1.0 - w)
+               + b.astype(jnp.float32) * w).astype(x.dtype)
+        if sel_cons is not None:
+            mix = jnp.where(sel_cons[i], mix, x)
+        mixed_buckets.append(mix)
+    payload = []
+    for i, m in enumerate(mixed_buckets):
+        enc = encode_wire(m, wire.dtype, keys=wire_key(t, ranks, i,
+                                                       wire.seed))
+        gathered = jax.tree.map(lambda e: e[recv_from], enc)
+        if sel_send is not None:
+            gathered = jax.tree.map(
+                lambda g: jnp.where(sel_send[i], g, jnp.zeros_like(g)),
+                gathered)
+        payload.append(gathered)
+    if ok is None:
+        ok = jnp.ones((valid.shape[0],), jnp.float32)
+    new_ring = {
+        "slots": tuple(slots[1:]) + (tuple(payload),),
+        "valid": jnp.concatenate(
+            [valid[:, 1:], ok.astype(jnp.float32)[:, None]], axis=1),
+        "t": t + 1,
+    }
+    return mixed_buckets, new_ring
 
 
 def allreduce_mean_sim(params: PyTree) -> PyTree:
@@ -239,6 +356,9 @@ def make_async_sim_train_step(
     staleness: int = 1,
     drop_rate: float = 0.0,
     drop_seed: int = 0,
+    wire_dtype: str = "fp32",
+    gossip_subset: float = 1.0,
+    wire_seed: int = 0,
 ) -> Callable:
     """Jitted p-replica simulated train step for the bounded-delay async
     protocol — the laptop-scale twin of the ``gossip_async`` train step.
@@ -258,6 +378,18 @@ def make_async_sim_train_step(
     bit-identical.  ``metrics['replica_variance']`` is measured at the
     mixed params — the model drift the paper's diffusion argument keeps
     bounded.
+
+    ``wire_dtype`` / ``gossip_subset`` / ``wire_seed`` turn on the
+    SCIENCE-MODE compressed wire: this is the drift/final-loss twin of the
+    ISSUE's wire knobs, not a bit-exactness oracle (those are the
+    ``gossip_mix_sim_quantized*`` functions over real bucket layouts).
+    Each param LEAF is treated as one wire bucket (zero-padded to a LANE
+    multiple for the per-tile scales), the outgoing mixed leaf goes through
+    an encode->decode roundtrip before landing in the ring — the slots keep
+    holding param-shaped fp32 trees, which is equivalent because decoding
+    at dispatch or at arrival is the same arithmetic — and leaves outside
+    the rotating subset ship zeros and are consumed at alpha = 0.  The
+    default (fp32, subset 1.0) is the exact PR-4 code path.
     """
     from .async_gossip import exchange_ok
 
@@ -267,6 +399,42 @@ def make_async_sim_train_step(
         np.stack([schedule.recv_from(t) for t in range(schedule.period)])
     )
     grad_fn = jax.vmap(jax.value_and_grad(loss_fn))
+    wire = WireFormat(dtype=wire_dtype, subset=gossip_subset, seed=wire_seed)
+
+    if wire.is_default:
+        @jax.jit
+        def step(opt_state, params, ring, batch, step_idx):
+            assert len(ring["slots"]) == int(staleness), (
+                f"ring carries {len(ring['slots'])} slots but the step was "
+                f"built for staleness {staleness}")
+            recv = perm_table[step_idx % schedule.period]
+            ok = exchange_ok(ring["t"], ranks, drop_seed, drop_rate)
+            mixed, new_ring = gossip_mix_sim_delayed_k(params, ring, recv,
+                                                       alpha, ok)
+            losses, grads = grad_fn(mixed, batch)
+            new_params, opt_state = optimizer.update(mixed, grads, opt_state)
+            metrics = {
+                "loss": losses.mean(),
+                "replica_variance": replica_variance(mixed),
+            }
+            return opt_state, new_params, new_ring, metrics
+
+        return step
+
+    def _roundtrip(m, t, leaf_idx):
+        """encode->decode one (p, ...) leaf through the wire format."""
+        if wire.dtype == "bf16":
+            return m.astype(jnp.bfloat16).astype(m.dtype)
+        flat = m.reshape(p, -1).astype(jnp.float32)
+        n = flat.shape[1]
+        pad = (-n) % LANE
+        if pad:
+            flat = jnp.pad(flat, ((0, 0), (0, pad)))
+        keys = wire_key(t, ranks, leaf_idx, wire.seed)
+        dec = decode_wire(encode_wire(flat, wire.dtype, keys=keys))
+        if pad:
+            dec = dec[:, :n]
+        return dec.reshape(m.shape).astype(m.dtype)
 
     @jax.jit
     def step(opt_state, params, ring, batch, step_idx):
@@ -274,9 +442,36 @@ def make_async_sim_train_step(
             f"ring carries {len(ring['slots'])} slots but the step was "
             f"built for staleness {staleness}")
         recv = perm_table[step_idx % schedule.period]
-        ok = exchange_ok(ring["t"], ranks, drop_seed, drop_rate)
-        mixed, new_ring = gossip_mix_sim_delayed_k(params, ring, recv,
-                                                   alpha, ok)
+        slots, valid, t = ring["slots"], ring["valid"], ring["t"]
+        ok = exchange_ok(t, ranks, drop_seed, drop_rate)
+        a = alpha * valid[:, 0]
+        leaves, treedef = jax.tree.flatten(params)
+        slot_leaves = jax.tree.leaves(slots[0])
+        subset = build_subset_schedule(len(leaves), wire.subset)
+        sel_cons = (subset.mask(t - int(staleness))
+                    if subset is not None else None)
+        sel_send = subset.mask(t) if subset is not None else None
+        mixed_leaves = []
+        for i, (x, b) in enumerate(zip(leaves, slot_leaves)):
+            w = a.reshape((p,) + (1,) * (x.ndim - 1))
+            mix = x * (1.0 - w) + b * w
+            if sel_cons is not None:
+                mix = jnp.where(sel_cons[i], mix, x)
+            mixed_leaves.append(mix)
+        mixed = jax.tree.unflatten(treedef, mixed_leaves)
+        payload_leaves = []
+        for i, m in enumerate(mixed_leaves):
+            g = _roundtrip(m, t, i)[recv]
+            if sel_send is not None:
+                g = jnp.where(sel_send[i], g, jnp.zeros_like(g))
+            payload_leaves.append(g)
+        payload = jax.tree.unflatten(treedef, payload_leaves)
+        new_ring = {
+            "slots": tuple(slots[1:]) + (payload,),
+            "valid": jnp.concatenate(
+                [valid[:, 1:], ok.astype(jnp.float32)[:, None]], axis=1),
+            "t": t + 1,
+        }
         losses, grads = grad_fn(mixed, batch)
         new_params, opt_state = optimizer.update(mixed, grads, opt_state)
         metrics = {

@@ -33,10 +33,12 @@ import numpy as np
 
 __all__ = [
     "GossipSchedule",
+    "BucketSubsetSchedule",
     "dissemination_partner",
     "hypercube_partner",
     "ring_partner",
     "build_schedule",
+    "build_subset_schedule",
     "diffusion_steps",
     "reachability",
 ]
@@ -160,6 +162,73 @@ def build_schedule(
             raise AssertionError(f"schedule row {t} is not a permutation")
     return GossipSchedule(p=p, topology=topology, num_rotations=num_rotations,
                           substeps=substeps, perms=perms)
+
+
+# ----------------------------------------------- partition-sampled exchange
+
+@dataclasses.dataclass(frozen=True)
+class BucketSubsetSchedule:
+    """Deterministic rotating bucket-subset schedule (partition-sampled
+    gossip, GoSGD/gossipy-style partial model exchange).
+
+    At exchange ``t`` the sender ships the ``n_send`` buckets in the
+    rotating window starting at ``(t % period) * n_send`` (mod
+    ``num_buckets``); every bucket is sent at least once per ``period``
+    exchanges, so over one period the full model diffuses. Unsent buckets
+    mix at alpha = 0 through the masked-alpha path — each per-step mixing
+    matrix row still sums to 1 (row-stochastic), so the mean-preservation /
+    diffusion arguments carry over with the diffusion clock slowed by
+    ~``period``. Like ``GossipSchedule``, everything is precomputed and
+    static inside jit; ``mask`` is the traced twin of ``selected`` for the
+    simulator oracle (identical arithmetic, floor-mod semantics in both)."""
+
+    num_buckets: int
+    n_send: int
+
+    def __post_init__(self):
+        if not (1 <= self.n_send < self.num_buckets):
+            raise ValueError(
+                f"subset schedule needs 1 <= n_send < num_buckets, got "
+                f"n_send={self.n_send}, num_buckets={self.num_buckets} "
+                "(full participation needs no schedule — pass None)")
+
+    @property
+    def period(self) -> int:
+        return -(-self.num_buckets // self.n_send)
+
+    def selected(self, t: int) -> np.ndarray:
+        """Host bool mask (num_buckets,) of the buckets sent at exchange t
+        (t may be negative: floor-mod, matching ``mask``)."""
+        start = (int(t) % self.period) * self.n_send
+        idx = (np.arange(self.num_buckets) - start) % self.num_buckets
+        return idx < self.n_send
+
+    def mask(self, t) -> "jnp.ndarray":
+        """Traced twin of ``selected`` — same arithmetic on a traced int32
+        step (jnp ``%`` is floor-mod, like numpy/Python)."""
+        import jax.numpy as jnp
+        start = (jnp.asarray(t, jnp.int32) % self.period) * self.n_send
+        idx = (jnp.arange(self.num_buckets, dtype=jnp.int32) - start) \
+            % self.num_buckets
+        return idx < self.n_send
+
+    @property
+    def fraction(self) -> float:
+        return self.n_send / self.num_buckets
+
+
+def build_subset_schedule(num_buckets: int, fraction: float
+                          ) -> BucketSubsetSchedule | None:
+    """Rotating subset schedule sending ``ceil(fraction * num_buckets)``
+    buckets per exchange; ``None`` (full participation — no schedule
+    machinery, the PR-1..5 path) when the fraction rounds up to everything."""
+    if not (0.0 < fraction <= 1.0):
+        raise ValueError(f"gossip subset fraction must be in (0, 1], "
+                         f"got {fraction}")
+    n_send = max(1, math.ceil(fraction * num_buckets - 1e-9))
+    if n_send >= num_buckets:
+        return None
+    return BucketSubsetSchedule(num_buckets=num_buckets, n_send=n_send)
 
 
 def reachability(schedule: GossipSchedule, steps: int) -> np.ndarray:

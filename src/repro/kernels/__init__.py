@@ -3,9 +3,14 @@
 #   gossip_mix      — the paper's per-step (w + w_recv)/2 fused elementwise
 #   fused_update    — single-sweep fused mix+apply (gossip arrival mix +
 #                     SGD/AdamW/LARS update, one HBM pass per bucket)
+#   quantize        — int8/fp8 wire encode + per-tile-scale decode (the
+#                     compressed gossip wire; decode folds into the sweeps)
 #   ssm_scan        — chunked Mamba selective scan (falcon-mamba / jamba)
 #   flash_attention — blocked causal attention w/ online softmax + windows
 from .ops import (INTERPRET, flash_mha, fused_adamw_bucket, fused_lars_bucket,
                   fused_sgd_bucket, gossip_mix_bucket, gossip_mix_flat,
-                  gossip_mix_tree, ssm_scan)
+                  gossip_mix_tree, gossip_mix_wire_bucket, ssm_scan)
+from .quantize import (WIRE_DTYPES, WireFormat, decode_wire, dequant_flat,
+                       encode_wire, payload_spec, wire_itemsize, wire_key,
+                       wire_uniform, zero_payload_like)
 from . import ref

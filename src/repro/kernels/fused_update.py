@@ -80,14 +80,23 @@ DEFAULT_ROWS = 256  # rows/tile: 256*128*4B*6bufs ~= 786 KB of VMEM
 # both mirror optim/optimizers.py op for op.
 
 def _mix_f32(p32: jnp.ndarray, partner: Optional[jnp.ndarray], alpha,
-             store_dtype) -> jnp.ndarray:
+             store_dtype, partner_scale=None) -> jnp.ndarray:
     """Arrival mix in fp32; round-trips through the bucket dtype so the
     fused path is bit-compatible with the standalone mix kernel's output
     (which materializes ``mixed`` in the bucket dtype). ``alpha`` may be a
-    Python float or a traced fp32 scalar (masked-alpha)."""
+    Python float or a traced fp32 scalar (masked-alpha).
+
+    ``partner_scale`` (quantized wire): the partner operand is int8/fp8
+    CODES and ``partner_scale`` the per-(row, 128)-tile fp32 scale — the
+    decode ``codes.astype(f32) * scale`` folds into this same sweep and is
+    bit-identical to the jnp oracle's ``dequant_flat`` (same op, same
+    order)."""
     if partner is None or (_alpha_static(alpha) and alpha == 0.0):
         return p32
-    mixed = p32 * (1.0 - alpha) + partner.astype(jnp.float32) * alpha
+    b32 = partner.astype(jnp.float32)
+    if partner_scale is not None:
+        b32 = b32 * partner_scale
+    mixed = p32 * (1.0 - alpha) + b32 * alpha
     return mixed.astype(store_dtype).astype(jnp.float32)
 
 
@@ -128,15 +137,21 @@ def _lars_math(p32, g32, m32, scale, lr, *, momentum: float,
 # grad | [partner] | moments...  ->  param' (bm, LANE) | moments'...
 # ``alpha=None`` in a body means the masked-alpha variant: alpha rides as
 # the LAST coefficient in the coef block (its width is static, so the index
-# resolves at trace time).
+# resolves at trace time). ``has_pscale`` prepends a (bm, 1) per-row wire
+# scale column (quantized partner decode, see kernels.quantize): the partner
+# ref then holds int8/fp8 codes, decoded in-register via ``_mix_f32``'s
+# ``partner_scale``.
 
 def _body_alpha(coef_ref, alpha):
     return coef_ref[0, coef_ref.shape[-1] - 1] if alpha is None else alpha
 
 
-def _sgd_kernel(coef_ref, p_ref, g_ref, *refs, alpha, momentum, weight_decay,
-                has_partner, has_mom):
-    refs = list(refs)
+def _sgd_kernel(coef_ref, *all_refs, alpha, momentum, weight_decay,
+                has_partner, has_mom, has_pscale=False):
+    refs = list(all_refs)
+    ps_ref = refs.pop(0) if has_pscale else None
+    p_ref = refs.pop(0)
+    g_ref = refs.pop(0)
     b_ref = refs.pop(0) if has_partner else None
     m_ref = refs.pop(0) if has_mom else None
     po_ref = refs.pop(0)
@@ -144,7 +159,8 @@ def _sgd_kernel(coef_ref, p_ref, g_ref, *refs, alpha, momentum, weight_decay,
     lr = coef_ref[0, 0]
     p = _mix_f32(p_ref[...].astype(jnp.float32),
                  b_ref[...] if b_ref is not None else None,
-                 _body_alpha(coef_ref, alpha), po_ref.dtype)
+                 _body_alpha(coef_ref, alpha), po_ref.dtype,
+                 partner_scale=ps_ref[...] if ps_ref is not None else None)
     g = g_ref[...].astype(jnp.float32)
     m = m_ref[...].astype(jnp.float32) if has_mom else None
     p, m = _sgd_math(p, g, m, lr, momentum=momentum,
@@ -154,15 +170,19 @@ def _sgd_kernel(coef_ref, p_ref, g_ref, *refs, alpha, momentum, weight_decay,
         mo_ref[...] = m.astype(mo_ref.dtype)
 
 
-def _adamw_kernel(coef_ref, p_ref, g_ref, *refs, alpha, b1, b2, eps,
-                  weight_decay, has_partner):
-    refs = list(refs)
+def _adamw_kernel(coef_ref, *all_refs, alpha, b1, b2, eps,
+                  weight_decay, has_partner, has_pscale=False):
+    refs = list(all_refs)
+    ps_ref = refs.pop(0) if has_pscale else None
+    p_ref = refs.pop(0)
+    g_ref = refs.pop(0)
     b_ref = refs.pop(0) if has_partner else None
     m_ref, v_ref, po_ref, mo_ref, vo_ref = refs
     lr, c1, c2 = coef_ref[0, 0], coef_ref[0, 1], coef_ref[0, 2]
     p = _mix_f32(p_ref[...].astype(jnp.float32),
                  b_ref[...] if b_ref is not None else None,
-                 _body_alpha(coef_ref, alpha), po_ref.dtype)
+                 _body_alpha(coef_ref, alpha), po_ref.dtype,
+                 partner_scale=ps_ref[...] if ps_ref is not None else None)
     g = g_ref[...].astype(jnp.float32)
     p, m, v = _adamw_math(p, g, m_ref[...], v_ref[...], lr, c1, c2,
                           b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)
@@ -237,7 +257,8 @@ def _join(main, tail, shape, dtype):
 # ----------------------------------------------------------- public: pallas
 
 def fused_sgd_1d(p, g, partner, mom, *, lr, alpha=0.5, momentum=0.9,
-                 weight_decay=0.0, block_rows=DEFAULT_ROWS, interpret=False,
+                 weight_decay=0.0, partner_scales=None,
+                 block_rows=DEFAULT_ROWS, interpret=False,
                  donate=False) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
     """Fused mix+SGD over a flat buffer of any length/leading shape.
 
@@ -246,23 +267,35 @@ def fused_sgd_1d(p, g, partner, mom, *, lr, alpha=0.5, momentum=0.9,
     (< LANE elements) is updated by a jnp epilogue built from the same math.
     ``partner=None`` or static ``alpha=0`` drops the mix operand; a traced
     ``alpha`` rides the coefficient block (masked-alpha variant).
+    ``partner_scales`` (fp32, one per (row, 128) tile) marks ``partner`` as
+    quantized wire codes, decoded in-kernel via a (bm, 1) scale column —
+    LANE-aligned buffers only (the bucket invariant).
     """
     dyn = not _alpha_static(alpha)
     has_partner = partner is not None and (dyn or alpha != 0.0)
     has_mom = mom is not None
+    has_pscale = has_partner and partner_scales is not None
+    if has_pscale:
+        assert p.size % LANE == 0, \
+            f"quantized partner needs LANE-aligned buffers, got {p.shape}"
+        assert partner_scales.size == p.size // LANE, \
+            (partner_scales.shape, p.shape)
     body = functools.partial(_sgd_kernel,
                              alpha=None if dyn else float(alpha),
                              momentum=float(momentum),
                              weight_decay=float(weight_decay),
-                             has_partner=has_partner, has_mom=has_mom)
+                             has_partner=has_partner, has_mom=has_mom,
+                             has_pscale=has_pscale)
     ins = [p, g] + ([partner] if has_partner else []) \
         + ([mom] if has_mom else [])
     mains, tails = _split_aligned(ins)
+    col_ins = [partner_scales.reshape(-1, 1).astype(jnp.float32)] \
+        if has_pscale else []
     outs = ([p.dtype, mom.dtype] if has_mom else [p.dtype])
     aliases = {0: 0, len(mains) - 1: 1} if has_mom else {0: 0}
     coefs = [lr] + ([alpha] if dyn else [])
     if mains[0].shape[0]:
-        ko = _tiled_call(body, coefs, [], mains, outs, aliases,
+        ko = _tiled_call(body, coefs, col_ins, mains, outs, aliases,
                          block_rows=block_rows, interpret=interpret,
                          donate=donate)
     else:
@@ -281,25 +314,34 @@ def fused_sgd_1d(p, g, partner, mom, *, lr, alpha=0.5, momentum=0.9,
 
 
 def fused_adamw_1d(p, g, partner, m, v, *, lr, c1, c2, alpha=0.5, b1=0.9,
-                   b2=0.95, eps=1e-8, weight_decay=0.0,
+                   b2=0.95, eps=1e-8, weight_decay=0.0, partner_scales=None,
                    block_rows=DEFAULT_ROWS, interpret=False, donate=False):
     """Fused mix+AdamW; ``c1``/``c2`` are the (1 - beta^t) bias corrections
     of the NEW step count (scalars, like ``lr``). A traced ``alpha`` rides
-    the coefficient block (masked-alpha variant)."""
+    the coefficient block (masked-alpha variant); ``partner_scales`` marks
+    ``partner`` as quantized wire codes (see ``fused_sgd_1d``)."""
     dyn = not _alpha_static(alpha)
     has_partner = partner is not None and (dyn or alpha != 0.0)
+    has_pscale = has_partner and partner_scales is not None
+    if has_pscale:
+        assert p.size % LANE == 0, \
+            f"quantized partner needs LANE-aligned buffers, got {p.shape}"
+        assert partner_scales.size == p.size // LANE, \
+            (partner_scales.shape, p.shape)
     body = functools.partial(_adamw_kernel,
                              alpha=None if dyn else float(alpha),
                              b1=float(b1), b2=float(b2), eps=float(eps),
                              weight_decay=float(weight_decay),
-                             has_partner=has_partner)
+                             has_partner=has_partner, has_pscale=has_pscale)
     ins = [p, g] + ([partner] if has_partner else []) + [m, v]
     mains, tails = _split_aligned(ins)
+    col_ins = [partner_scales.reshape(-1, 1).astype(jnp.float32)] \
+        if has_pscale else []
     nin = len(mains)
     aliases = {0: 0, nin - 2: 1, nin - 1: 2}
     coefs = [lr, c1, c2] + ([alpha] if dyn else [])
     if mains[0].shape[0]:
-        ko = _tiled_call(body, coefs, [], mains,
+        ko = _tiled_call(body, coefs, col_ins, mains,
                          [p.dtype, jnp.float32, jnp.float32], aliases,
                          block_rows=block_rows, interpret=interpret,
                          donate=donate)

@@ -31,7 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["gossip_mix_2d", "gossip_mix_1d", "LANE", "DEFAULT_ROWS"]
+__all__ = ["gossip_mix_2d", "gossip_mix_q2d", "gossip_mix_1d", "LANE",
+           "DEFAULT_ROWS"]
 
 LANE = 128          # TPU lane width
 DEFAULT_ROWS = 512  # rows per tile: 512*128*4B*3bufs ~= 786 KB of VMEM
@@ -69,8 +70,10 @@ def gossip_mix_2d(a: jnp.ndarray, b: jnp.ndarray, alpha=0.5,
 
     ``donate=True`` aliases the output buffer onto ``a`` (in-place mix on the
     persistent bucket — no extra HBM allocation when the caller donates).
-    ``alpha``: Python float (static) or traced fp32 scalar (masked-alpha)."""
-    assert a.shape == b.shape and a.dtype == b.dtype, (a.shape, b.shape)
+    ``alpha``: Python float (static) or traced fp32 scalar (masked-alpha).
+    ``b`` may be a narrower dtype than ``a`` (bf16 wire payload mixed into
+    an fp32 bucket): both operands are promoted to fp32 in-kernel."""
+    assert a.shape == b.shape, (a.shape, b.shape)
     M, N = a.shape
     assert N % LANE == 0, f"last dim {N} must be a multiple of {LANE}"
     bm = min(block_rows, M)
@@ -98,6 +101,65 @@ def gossip_mix_2d(a: jnp.ndarray, b: jnp.ndarray, alpha=0.5,
     )(al, a, b)
 
 
+def _mix_kernel_q(s_ref, a_ref, q_ref, o_ref, *, alpha: float):
+    # quantized-wire variant: the partner arrives as int8/fp8 codes plus one
+    # fp32 scale per row, decoded in-register — codes.astype(f32) * scale is
+    # the exact op the jnp oracle (kernels.quantize.dequant_flat) runs, so
+    # decode-in-kernel and decode-then-mix are bit-identical
+    a = a_ref[...].astype(jnp.float32)
+    b = q_ref[...].astype(jnp.float32) * s_ref[...]
+    o_ref[...] = (a * (1.0 - alpha) + b * alpha).astype(o_ref.dtype)
+
+
+def _mix_kernel_q_dyn(al_ref, s_ref, a_ref, q_ref, o_ref):
+    al = al_ref[0, 0]
+    a = a_ref[...].astype(jnp.float32)
+    b = q_ref[...].astype(jnp.float32) * s_ref[...]
+    o_ref[...] = (a * (1.0 - al) + b * al).astype(o_ref.dtype)
+
+
+def gossip_mix_q2d(a: jnp.ndarray, q: jnp.ndarray, s: jnp.ndarray,
+                   alpha=0.5, block_rows: int = DEFAULT_ROWS,
+                   interpret: bool = False,
+                   donate: bool = False) -> jnp.ndarray:
+    """Quantized-wire arrival mix: ``out = (1-alpha)*a + alpha*(q*s)``.
+
+    ``a``: (M, LANE) local bucket view; ``q``: (M, LANE) int8 / fp8 codes;
+    ``s``: (M,) or (M, 1) fp32 per-(row, 128)-tile scales, streamed as a
+    (bm, 1) column like the LARS trust scale. The decode folds into the
+    same single sweep as the mix — the codes never round-trip through HBM
+    as fp32. ``alpha`` static or traced (masked-alpha), as in
+    ``gossip_mix_2d``."""
+    M, N = a.shape
+    assert q.shape == (M, N), (a.shape, q.shape)
+    assert N == LANE, f"quantized mix operates on (rows, {LANE}) views"
+    sc = s.reshape(M, 1).astype(jnp.float32)
+    bm = min(block_rows, M)
+    grid = (pl.cdiv(M, bm),)
+    spec = pl.BlockSpec((bm, N), lambda i: (i, 0))
+    s_spec = pl.BlockSpec((bm, 1), lambda i: (i, 0))
+    if alpha_is_static(alpha):
+        return pl.pallas_call(
+            functools.partial(_mix_kernel_q, alpha=float(alpha)),
+            grid=grid,
+            in_specs=[s_spec, spec, spec],
+            out_specs=spec,
+            out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+            input_output_aliases={1: 0} if donate else {},
+            interpret=interpret,
+        )(sc, a, q)
+    al = jnp.asarray(alpha, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _mix_kernel_q_dyn,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)), s_spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+        input_output_aliases={2: 0} if donate else {},
+        interpret=interpret,
+    )(al, sc, a, q)
+
+
 def gossip_mix_1d(a: jnp.ndarray, b: jnp.ndarray, alpha=0.5,
                   block_rows: int = DEFAULT_ROWS,
                   interpret: bool = False,
@@ -109,7 +171,7 @@ def gossip_mix_1d(a: jnp.ndarray, b: jnp.ndarray, alpha=0.5,
     elements) is mixed by a jnp epilogue. LANE-multiple buffers (the bucket
     invariant) take the pure-kernel path with no tail and no concatenation.
     """
-    assert a.shape == b.shape and a.dtype == b.dtype, (a.shape, b.shape)
+    assert a.shape == b.shape, (a.shape, b.shape)
     n = a.size
     av, bv = a.reshape(-1), b.reshape(-1)
     n_main = (n // LANE) * LANE

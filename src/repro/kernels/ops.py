@@ -17,14 +17,16 @@ import numpy as np
 from .flash_attention import flash_attention
 from .fused_update import (fused_adamw_1d, fused_adamw_ref, fused_lars_1d,
                            fused_lars_ref, fused_sgd_1d, fused_sgd_ref)
-from .gossip_mix import LANE, gossip_mix_1d, gossip_mix_2d
+from .gossip_mix import LANE, gossip_mix_1d, gossip_mix_2d, gossip_mix_q2d
+from .quantize import dequant_flat
 from .ssm_scan import ssm_scan_chunked
 
 PyTree = Any
 
 __all__ = ["INTERPRET", "gossip_mix_flat", "gossip_mix_tree",
-           "gossip_mix_bucket", "fused_sgd_bucket", "fused_adamw_bucket",
-           "fused_lars_bucket", "ssm_scan", "flash_mha"]
+           "gossip_mix_bucket", "gossip_mix_wire_bucket", "fused_sgd_bucket",
+           "fused_adamw_bucket", "fused_lars_bucket", "ssm_scan",
+           "flash_mha"]
 
 
 def _default_interpret() -> bool:
@@ -71,6 +73,25 @@ def gossip_mix_bucket(a: jnp.ndarray, b: jnp.ndarray,
     return out.reshape(a.shape)
 
 
+def gossip_mix_wire_bucket(a: jnp.ndarray, payload, alpha=0.5) -> jnp.ndarray:
+    """Mix one bucket against an arrived WIRE payload.
+
+    ``payload`` is either a raw array (fp32/bf16 wire — dtype-promoting mix,
+    same kernel as ``gossip_mix_bucket``) or a quantized ``{"q", "s"}`` dict
+    (int8/fp8 codes + per-(row, 128)-tile fp32 scales), whose decode folds
+    into the mix sweep via the scale column stream — bit-identical to
+    ``kernels.quantize.dequant_flat`` followed by the plain mix."""
+    if not isinstance(payload, dict):
+        return gossip_mix_bucket(a, payload, alpha=alpha)
+    n = int(np.prod(a.shape))
+    assert n % LANE == 0, f"bucket size {a.shape} not LANE-aligned"
+    out = gossip_mix_q2d(a.reshape(-1, LANE),
+                         payload["q"].reshape(-1, LANE),
+                         payload["s"].reshape(-1), alpha=alpha,
+                         interpret=INTERPRET, donate=not INTERPRET)
+    return out.reshape(a.shape)
+
+
 def _fused_impl(impl: Optional[str]) -> str:
     """Backend choice for the fused mix+apply update kernels.
 
@@ -93,27 +114,44 @@ def fused_sgd_bucket(p, g, partner, mom, *, lr, alpha=0.5, momentum=0.9,
     ``mixed = (1-alpha)*p + alpha*partner`` then the SGD-momentum update at
     the mixed point, one read + one write pass, donation-friendly.  Accepts
     any leading axes (the sharded replica axis) over the flat bucket dim and
-    ragged (non-LANE) buffers via the kernel's tail epilogue."""
+    ragged (non-LANE) buffers via the kernel's tail epilogue.  A quantized
+    wire partner (``{"q", "s"}`` dict, see kernels.quantize) is decoded
+    in-kernel on the Pallas path and pre-decoded (bit-identically) on the
+    jnp path."""
+    scales = None
+    if isinstance(partner, dict):
+        if _fused_impl(impl) == "jnp":
+            partner = dequant_flat(partner["q"], partner["s"])
+        else:
+            partner, scales = partner["q"], partner["s"]
     if _fused_impl(impl) == "jnp":
         return fused_sgd_ref(p, g, partner, mom, lr=lr, alpha=alpha,
                              momentum=momentum, weight_decay=weight_decay)
     return fused_sgd_1d(p, g, partner, mom, lr=lr, alpha=alpha,
                         momentum=momentum, weight_decay=weight_decay,
+                        partner_scales=scales,
                         interpret=INTERPRET, donate=not INTERPRET)
 
 
 def fused_adamw_bucket(p, g, partner, m, v, *, lr, c1, c2, alpha=0.5, b1=0.9,
                        b2=0.95, eps=1e-8, weight_decay=0.0,
                        impl: Optional[str] = None):
-    """Single-sweep fused mix+AdamW over one bucket (see fused_sgd_bucket)."""
+    """Single-sweep fused mix+AdamW over one bucket (see fused_sgd_bucket);
+    quantized wire partners decode in the same sweep."""
+    scales = None
+    if isinstance(partner, dict):
+        if _fused_impl(impl) == "jnp":
+            partner = dequant_flat(partner["q"], partner["s"])
+        else:
+            partner, scales = partner["q"], partner["s"]
     if _fused_impl(impl) == "jnp":
         return fused_adamw_ref(p, g, partner, m, v, lr=lr, c1=c1, c2=c2,
                                alpha=alpha, b1=b1, b2=b2, eps=eps,
                                weight_decay=weight_decay)
     return fused_adamw_1d(p, g, partner, m, v, lr=lr, c1=c1, c2=c2,
                           alpha=alpha, b1=b1, b2=b2, eps=eps,
-                          weight_decay=weight_decay, interpret=INTERPRET,
-                          donate=not INTERPRET)
+                          weight_decay=weight_decay, partner_scales=scales,
+                          interpret=INTERPRET, donate=not INTERPRET)
 
 
 def fused_lars_bucket(p, g, partner, mom, row_scale, *, lr, alpha=0.5,

@@ -54,6 +54,22 @@ def main() -> None:
                     "skipped (mixed with alpha=0); deterministic per "
                     "(step, rank) so resumed runs replay the same drops")
     ap.add_argument("--drop-seed", type=int, default=0)
+    ap.add_argument("--wire-dtype", default="fp32",
+                    choices=["fp32", "bf16", "int8", "fp8"],
+                    help="gossip wire payload encoding (needs --packed for "
+                    "non-fp32): int8 = stochastic-rounded codes + per-128-"
+                    "tile fp32 scales (4x fewer bytes), fp8 = e4m3 ditto, "
+                    "bf16 = plain downcast; decode happens inside the "
+                    "arrival-mix / fused-update sweep")
+    ap.add_argument("--gossip-subset", type=float, default=1.0,
+                    metavar="FRAC",
+                    help="partition-sampled gossip: ship only ceil(FRAC * "
+                    "num_buckets) buckets per exchange on a deterministic "
+                    "rotating schedule; unsent buckets skip (alpha=0). "
+                    "Needs --packed when < 1.0")
+    ap.add_argument("--wire-seed", type=int, default=0,
+                    help="seed of the stochastic-rounding hash (independent "
+                    "of --drop-seed)")
     ap.add_argument("--packed", action="store_true",
                     help="bucketed persistent-buffer gossip engine: params "
                     "packed once into LANE-aligned buckets, one ppermute + "
@@ -109,11 +125,14 @@ def main() -> None:
         topology=args.topology, num_rotations=args.num_rotations,
         gossip_packed=args.packed, staleness=args.staleness,
         drop_rate=args.drop_timeout, drop_seed=args.drop_seed,
+        wire_dtype=args.wire_dtype, gossip_subset=args.gossip_subset,
+        wire_seed=args.wire_seed,
         fused_update=args.fused_update,
         remat=not (args.smoke or len(jax.devices()) == 1))
     state, _ = init_train_state(jax.random.key(0), cfg, dist, opt,
                                 packed=args.packed, layout=bundle.layout,
-                                inbox=bundle.protocol.staleness)
+                                inbox=bundle.protocol.staleness,
+                                wire=bundle.wire)
 
     start_step = 0
     if args.resume and args.checkpoint and checkpoint_exists(args.checkpoint):
@@ -142,6 +161,9 @@ def main() -> None:
                    metadata={"arch": cfg.name, "protocol": args.protocol,
                              "staleness": bundle.protocol.staleness,
                              "drop_timeout": args.drop_timeout,
+                             "wire_dtype": args.wire_dtype,
+                             "gossip_subset": args.gossip_subset,
+                             "wire_seed": args.wire_seed,
                              "phase": end_step % max(bundle.protocol.period, 1)},
                    step=end_step)
         print(f"checkpoint -> {args.checkpoint}")

@@ -232,10 +232,15 @@ def lars(schedule: Schedule | float, momentum: float = 0.9,
         a per-(row, 128)-tile scale; then the single-sweep kernel applies
         mix + momentum + trust-scaled step.  Unlike the tree-level packed
         update there is NO per-step re-pack concatenate."""
-        from repro.kernels import fused_lars_bucket
+        from repro.kernels import dequant_flat, fused_lars_bucket
         if layout is None:
             raise ValueError("lars.fused_update needs the BucketLayout for "
                              "its per-layer norm prepass")
+        if isinstance(partner, dict):
+            # quantized wire payload: pre-decode once — the norm prepass
+            # reads the mixed params, so the decode cannot stay in-kernel
+            # here; dequant-then-mix is bit-identical to in-kernel decode
+            partner = dequant_flat(partner["q"], partner["s"])
         (mom,) = moments
         scale = _lars_row_scale(
             layout, bucket_idx, p, g, partner, alpha=alpha,

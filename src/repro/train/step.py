@@ -59,7 +59,9 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import make_protocol, make_ring_shuffle
-from repro.core.async_gossip import inbox_ring_specs, init_inbox_ring
+from repro.core.async_gossip import (inbox_ring_specs, init_inbox_ring,
+                                     init_wire_inbox_ring,
+                                     wire_inbox_ring_specs)
 from repro.core.buckets import PackedParams, build_layout, packed_param_specs
 from repro.dist_ctx import use_distribution
 from repro.models import lm_init
@@ -75,7 +77,7 @@ __all__ = ["TrainStepBundle", "make_train_step_bundle", "init_train_state"]
 
 class TrainStepBundle:
     def __init__(self, *, step_fn, state_specs, batch_specs, protocol, dist,
-                 cfg, optimizer, layout=None, fused=False):
+                 cfg, optimizer, layout=None, fused=False, wire=None):
         self.step_fn = step_fn          # (state, batch, *, phase:int static)
         self.state_specs = state_specs
         self.batch_specs = batch_specs
@@ -85,6 +87,7 @@ class TrainStepBundle:
         self.optimizer = optimizer
         self.layout = layout            # BucketLayout when gossip_packed
         self.fused = fused              # single-sweep fused mix+apply engine
+        self.wire = wire                # WireFormat when compressed/sampled
 
     def jitted(self, phase: int, donate: bool = True):
         fn = functools.partial(self.step_fn, phase=phase)
@@ -103,7 +106,7 @@ def _replicate_tree(tree: PyTree, dp: int) -> PyTree:
 
 def init_train_state(key, cfg: ModelConfig, dist: Distribution,
                      optimizer: Optimizer, *, packed: bool = False,
-                     layout=None, inbox: int = 0):
+                     layout=None, inbox: int = 0, wire=None):
     """(state, state_axes): state = {"params","opt"}, leaves carry a leading
     replica axis of size dist.dp (1 in single-pod fsdp mode).
 
@@ -117,7 +120,12 @@ def init_train_state(key, cfg: ModelConfig, dist: Distribution,
     ``inbox`` is the inbox-ring depth (pass the bundle's
     ``protocol.staleness``; 0 = no ring): gossip_async with dp > 1 carries a
     staleness-k ring bootstrapped all-invalid ("nothing received yet"), so
-    the first k arrival mixes are skips."""
+    the first k arrival mixes are skips.
+
+    ``wire`` (pass the bundle's ``.wire``; None = the uncompressed wire)
+    switches the ring slots to compressed wire payloads — codes + scales
+    zero-initialized, consumed only at alpha = 0 until real dispatches
+    land."""
     params, axes = lm_init(key, cfg)
     params = _replicate_tree(params, max(dist.dp, 1))
     if packed:
@@ -132,7 +140,14 @@ def init_train_state(key, cfg: ModelConfig, dist: Distribution,
     opt_state = optimizer.init(params)
     state = {"params": params, "opt": opt_state}
     if inbox:
-        state["inbox"] = init_inbox_ring(params, int(inbox), max(dist.dp, 1))
+        if wire is not None and not wire.is_default:
+            if not packed:
+                raise ValueError("the compressed wire needs packed state")
+            state["inbox"] = init_wire_inbox_ring(params, int(inbox),
+                                                  max(dist.dp, 1), wire)
+        else:
+            state["inbox"] = init_inbox_ring(params, int(inbox),
+                                             max(dist.dp, 1))
     return state, axes
 
 
@@ -169,6 +184,9 @@ def make_train_step_bundle(
     staleness: int = 1,
     drop_rate: float = 0.0,
     drop_seed: int = 0,
+    wire_dtype: str = "fp32",
+    gossip_subset: float = 1.0,
+    wire_seed: int = 0,
     fused_update: Optional[bool] = None,
     fused_impl: Optional[str] = None,
     mix_impl: Optional[Callable] = None,
@@ -204,6 +222,16 @@ def make_train_step_bundle(
     through the deterministic ``core.async_gossip.exchange_ok`` hash seeded
     by ``drop_seed``.
 
+    ``wire_dtype`` ("fp32"/"bf16"/"int8"/"fp8") and ``gossip_subset``
+    configure the compressed + partition-sampled gossip wire
+    (kernels.quantize.WireFormat): int8/fp8 payloads are stochastic-rounded
+    on dispatch (hash seeded by ``wire_seed``, independent of the drop
+    seed) and decoded inside the arrival-mix / fused-update sweep, and
+    ``gossip_subset < 1`` ships only a rotating subset of buckets per
+    exchange (unsent buckets skip at alpha = 0). Requires
+    ``gossip_packed=True``; the fp32 full-participation default is the
+    exact PR-1..5 code path.
+
     ``fused_update`` (default None = auto: on when packed and the optimizer
     exposes a ``fused_update`` backend) collapses mix + optimizer update
     into one single-sweep kernel per bucket; at dp > 1 this also shifts the
@@ -214,6 +242,18 @@ def make_train_step_bundle(
     mesh = dist.mesh
     if rotate_samples is None:
         rotate_samples = protocol in ("gossip", "gossip_async")
+
+    from repro.kernels.quantize import WireFormat
+    wire_fmt = WireFormat(dtype=wire_dtype, subset=gossip_subset,
+                          seed=wire_seed)
+    wired = (not wire_fmt.is_default
+             and protocol in ("gossip", "gossip_async"))
+    if wired and not gossip_packed:
+        raise ValueError(
+            "the compressed/partition-sampled wire (wire_dtype="
+            f"{wire_dtype!r}, gossip_subset={gossip_subset}) needs "
+            "gossip_packed=True — the per-leaf path has no lane-aligned "
+            "buckets to quantize over")
 
     state_specs = state_specs_of(dist, state_shapes, state_axes)
     param_specs = state_specs["params"]
@@ -241,8 +281,10 @@ def make_train_step_bundle(
         state_specs = state_specs_of(dist, state_shapes, state_axes,
                                      param_specs=param_specs)
         if mix_impl is None:  # donation-friendly Pallas bucket mix
-            from repro.kernels import gossip_mix_bucket
-            mix_impl = gossip_mix_bucket
+            from repro.kernels import gossip_mix_bucket, gossip_mix_wire_bucket
+            # the wire-aware wrapper decodes quantized payloads inside the
+            # same sweep; on raw payloads it IS gossip_mix_bucket
+            mix_impl = gossip_mix_wire_bucket if wired else gossip_mix_bucket
 
     shard_local_ok = (layout is None or layout.num_shards == 1
                       or getattr(optimizer, "fused_shard_local", True))
@@ -267,7 +309,9 @@ def make_train_step_bundle(
         topology=topology, num_rotations=num_rotations, alpha=gossip_alpha,
         staleness=staleness, drop_rate=drop_rate, drop_seed=drop_seed,
         mode=gossip_mode, mix_impl=mix_impl,
-        packed_layout=layout, seed=seed)
+        packed_layout=layout, seed=seed,
+        wire_dtype=wire_dtype, gossip_subset=gossip_subset,
+        wire_seed=wire_seed)
 
     fused_eng = None
     if fused_update:
@@ -278,11 +322,12 @@ def make_train_step_bundle(
                 mesh, dist.dp_axes, proto.schedule, layout, optimizer,
                 alpha=gossip_alpha, staleness=proto.staleness,
                 drop_rate=drop_rate, drop_seed=drop_seed,
-                mode=gossip_mode, impl=fused_impl)
+                mode=gossip_mode, impl=fused_impl, wire=proto.wire)
         elif protocol == "gossip" and proto.dp > 1:
             fused_eng = make_packed_fused_update(
                 mesh, dist.dp_axes, proto.schedule, layout, optimizer,
-                alpha=gossip_alpha, mode=gossip_mode, impl=fused_impl)
+                alpha=gossip_alpha, mode=gossip_mode, impl=fused_impl,
+                wire=proto.wire)
         else:
             # non-gossip phases (agd / every_logp / none) and dp == 1 run
             # the same single-sweep kernel with alpha = 0
@@ -292,10 +337,15 @@ def make_train_step_bundle(
 
     if proto.staleness > 0:
         # the staleness-k inbox ring rides in the train state: k slots with
-        # the params' shapes and sharding, the per-slot validity mask, and
-        # the dispatch counter (all checkpointed with the state)
-        state_specs = dict(state_specs, inbox=inbox_ring_specs(
-            param_specs, dist.dp_axes, proto.staleness))
+        # the params' shapes and sharding (wire payloads — codes + scales —
+        # under a compressed wire), the per-slot validity mask, and the
+        # dispatch counter (all checkpointed with the state)
+        if proto.wire is not None:
+            state_specs = dict(state_specs, inbox=wire_inbox_ring_specs(
+                param_specs, dist.dp_axes, proto.staleness, proto.wire))
+        else:
+            state_specs = dict(state_specs, inbox=inbox_ring_specs(
+                param_specs, dist.dp_axes, proto.staleness))
 
     # per-layer remat happens inside the stack (blocks.stack_apply) — the
     # whole-loss checkpoint variant kept 130+GB of scan residuals alive.
@@ -366,7 +416,7 @@ def make_train_step_bundle(
     return TrainStepBundle(
         step_fn=train_step, state_specs=state_specs, batch_specs=batch_specs,
         protocol=proto, dist=dist, cfg=cfg, optimizer=optimizer,
-        layout=layout, fused=fused_update)
+        layout=layout, fused=fused_update, wire=proto.wire)
 
 
 def _build_packed_layout(dist: Distribution, param_shapes: PyTree,
